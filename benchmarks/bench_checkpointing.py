@@ -1,0 +1,213 @@
+"""Checkpoint-pipeline benchmarks — one function per paper figure.
+
+* ``bench_save_cost``        — Fig. 11: enabling UCP adds zero save cost
+                               (conversion is lazy); async overlap benefit.
+* ``bench_transform_load``   — Fig. 12: UCP convert+load vs standard load
+                               across three model sizes (paper: 1.14–1.37×),
+                               plus the beyond-paper direct-reshard path.
+* ``bench_conversion_scaling`` — §3.2 Table 2: Union parallelism speedup
+                               and the streaming (constant-memory) mode.
+* ``bench_correctness``      — Fig. 6/7 + Table 3: loss curves for Source →
+                               {Targets} vs the uninterrupted baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from .common import build_sized, default_mesh, state_nbytes
+
+from repro.configs import ParallelismConfig, TrainConfig
+from repro.core.convert import convert_to_ucp
+from repro.core.dist_ckpt import DistCheckpoint
+from repro.ckpt.manager import CheckpointManager
+from repro.ckpt.restore import RestoreStats, state_from_dist, state_from_ucp
+from repro.ckpt.saver import AsyncSaver, snapshot_state, write_distributed
+from repro.core.layout import MeshSpec
+from repro.dist.sharding import make_plan, vocab_multiple
+from repro.models import build_model
+from repro.train.trainer import Trainer
+
+
+def _timeit(fn, n=3):
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ---------------------------------------------------------------------------
+
+
+def bench_save_cost() -> list[tuple[str, float, str]]:
+    """Fig. 11: saving cost with vs without UCP in the loop."""
+    rows = []
+    mesh = default_mesh()
+    parallel = ParallelismConfig()
+    for size in ("small", "medium"):
+        cfg, lm, plan, state = build_sized(size, mesh, parallel)
+        snap = snapshot_state(state)
+        nbytes = state_nbytes(state)
+        with tempfile.TemporaryDirectory() as tmp:
+            i = [0]
+
+            def save_plain():
+                i[0] += 1
+                write_distributed(snap, plan, i[0], f"{tmp}/plain{i[0]}")
+
+            t_plain = _timeit(save_plain)
+            # "UCP enabled" = identical save path; conversion is lazy and
+            # happens zero times during training.
+            def save_ucp_enabled():
+                i[0] += 1
+                write_distributed(snap, plan, i[0], f"{tmp}/ucp{i[0]}")
+
+            t_ucp = _timeit(save_ucp_enabled)
+            # async: submit returns after snapshot; writes overlap compute
+            saver = AsyncSaver()
+
+            def save_async():
+                i[0] += 1
+                saver.submit(state, plan, i[0], f"{tmp}/async{i[0]}")
+
+            t_async_submit = _timeit(save_async)
+            saver.wait()
+            saver.close()
+        rows.append((f"save_plain_{size}", t_plain * 1e6,
+                     f"{nbytes/1e6/t_plain:.0f}MB/s"))
+        rows.append((f"save_ucp_enabled_{size}", t_ucp * 1e6,
+                     f"ratio={t_ucp/t_plain:.3f}"))
+        rows.append((f"save_async_submit_{size}", t_async_submit * 1e6,
+                     f"blocking_frac={t_async_submit/t_plain:.3f}"))
+    return rows
+
+
+def bench_transform_load() -> list[tuple[str, float, str]]:
+    """Fig. 12: standard load vs UCP convert+load vs direct-reshard."""
+    rows = []
+    src_mesh = default_mesh(4, 2)
+    tgt_mesh = default_mesh(2, 2)
+    parallel = ParallelismConfig()
+    jmesh = jax.make_mesh((1, 1), ("data", "model"))
+    for size in ("small", "medium", "large"):
+        cfg, lm, plan_src, state = build_sized(size, src_mesh, parallel)
+        plan_tgt = make_plan(cfg, lm.registry, parallel, tgt_mesh)
+        snap = snapshot_state(state)
+        nbytes = state_nbytes(state)
+        with tempfile.TemporaryDirectory() as tmp:
+            write_distributed(snap, plan_src, 1, f"{tmp}/ck")
+            ck = DistCheckpoint.open(f"{tmp}/ck")
+
+            # standard load: same layout, per-rank reads (the baseline)
+            t_std = _timeit(lambda: state_from_dist(ck, plan_src, jmesh), n=2)
+
+            # UCP path: convert once + load under the new layout
+            t0 = time.perf_counter()
+            ucp, cstats = convert_to_ucp(ck, f"{tmp}/ucp", workers=4)
+            t_conv = time.perf_counter() - t0
+            t_load = _timeit(lambda: state_from_ucp(ucp, plan_tgt, jmesh), n=2)
+
+            # beyond-paper: direct reshard from the distributed ckpt
+            t_direct = _timeit(lambda: state_from_dist(ck, plan_tgt, jmesh), n=2)
+
+        rows.append((f"std_load_{size}", t_std * 1e6,
+                     f"{nbytes/1e6/t_std:.0f}MB/s"))
+        rows.append((f"ucp_convert_{size}", t_conv * 1e6,
+                     f"{cstats.throughput_mb_s():.0f}MB/s"))
+        rows.append((f"ucp_load_{size}", t_load * 1e6,
+                     f"convert+load/std={(t_conv+t_load)/t_std:.2f}x"))
+        rows.append((f"direct_reshard_{size}", t_direct * 1e6,
+                     f"vs_ucp_path={(t_conv+t_load)/t_direct:.2f}x"))
+    return rows
+
+
+def bench_conversion_scaling() -> list[tuple[str, float, str]]:
+    """Union parallelism (paper: per-parameter parallel) + streaming mode."""
+    rows = []
+    mesh = default_mesh(4, 4)
+    parallel = ParallelismConfig()
+    cfg, lm, plan, state = build_sized("large", mesh, parallel)
+    snap = snapshot_state(state)
+    with tempfile.TemporaryDirectory() as tmp:
+        write_distributed(snap, plan, 1, f"{tmp}/ck")
+        ck = DistCheckpoint.open(f"{tmp}/ck")
+        base = None
+        for workers in (1, 2, 4, 8):
+            d = f"{tmp}/u{workers}"
+            t0 = time.perf_counter()
+            _, stats = convert_to_ucp(ck, d, workers=workers)
+            dt = time.perf_counter() - t0
+            base = base or dt
+            rows.append((f"convert_workers{workers}", dt * 1e6,
+                         f"speedup={base/dt:.2f}x"))
+            shutil.rmtree(d)
+        for streaming in (False, True):
+            d = f"{tmp}/s{streaming}"
+            t0 = time.perf_counter()
+            convert_to_ucp(ck, d, workers=4, streaming=streaming)
+            dt = time.perf_counter() - t0
+            rows.append((f"convert_streaming={streaming}", dt * 1e6,
+                         "constant-memory" if streaming else "full-atom-memory"))
+            shutil.rmtree(d)
+    return rows
+
+
+def bench_correctness() -> list[tuple[str, float, str]]:
+    """Fig. 6/7 + Table 3: Source → Target loss-curve agreement.
+
+    Trains a tiny llama-family model 16 steps (baseline), re-trains to step
+    8 under the Source config, then resumes under three Targets; reports
+    the max |Δloss| over the resumed segment for each (paper tolerance:
+    0.02)."""
+    import jax
+
+    from repro.configs import get_config, reduced
+
+    rows = []
+    cfg = reduced(get_config("smollm-360m"))
+    tcfg = TrainConfig(warmup_steps=2, total_steps=100)
+
+    def trainer(tmp, save_interval=8, **kw):
+        jm = jax.make_mesh((1, 1), ("data", "model"))
+        return Trainer.create(
+            cfg, ParallelismConfig(**kw), tcfg, jm, batch_size=4, seq_len=24,
+            ckpt_dir=tmp, save_interval=save_interval, async_save=False,
+        )
+
+    with tempfile.TemporaryDirectory() as tmp:
+        t = trainer(f"{tmp}/base")
+        s, _ = t.init_or_restore()
+        _, hist = t.run(s, 0, 16)
+        base = {h["step"]: h["loss"] for h in hist}
+
+        t = trainer(f"{tmp}/src")
+        s, _ = t.init_or_restore()
+        t.run(s, 0, 8)
+
+        targets = {
+            "same_layout": dict(),
+            "zero1": dict(zero=1, fsdp=False),
+            "no_tp_no_sp": dict(tensor_parallel=False, sequence_parallel=False),
+        }
+        for name, kw in targets.items():
+            # targets must not save, or they would pollute the Source dir
+            # and later targets would resume from the wrong step
+            t2 = trainer(f"{tmp}/src", save_interval=10**6, **kw)
+            t0 = time.perf_counter()
+            s2, info = t2.init_or_restore()
+            dt = time.perf_counter() - t0
+            assert info is not None and info.step == 8
+            _, hist2 = t2.run(s2, 8, 8)
+            delta = max(abs(h["loss"] - base[h["step"]]) for h in hist2)
+            rows.append((f"resume_{name}", dt * 1e6,
+                         f"mode={info.mode.value};max_dloss={delta:.4f}"))
+    return rows

@@ -1,0 +1,54 @@
+"""Shared benchmark fixtures: model-size ladder + state builders.
+
+Benchmarks measure the *checkpoint pipeline* (the paper's subject), which
+runs on the host CPU in any deployment — so unlike step-time numbers,
+these wall-clock measurements are real, not simulated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import ParallelismConfig, get_config
+from repro.core.layout import MeshSpec
+from repro.dist.sharding import ShardingPlan, make_plan, vocab_multiple
+from repro.models import build_model
+from repro.train.optimizer import init_state
+
+# Three model sizes (param counts ≈ 4M / 31M / 124M → state bytes ×12),
+# mirroring the paper's GPT-3 350M / LLaMA-7B / MoE ladder at CPU scale.
+SIZES = {
+    "small": dict(num_layers=4, d_model=256, num_heads=4, num_kv_heads=2,
+                  d_ff=1024, vocab_size=8192),
+    "medium": dict(num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+                   d_ff=2048, vocab_size=16384),
+    "large": dict(num_layers=12, d_model=1024, num_heads=16, num_kv_heads=8,
+                  d_ff=4096, vocab_size=32768),
+}
+
+
+def build_sized(size: str, mesh: MeshSpec, parallel: ParallelismConfig):
+    cfg = dataclasses.replace(
+        get_config("smollm-360m"), name=f"bench-{size}", tie_embeddings=True,
+        **SIZES[size],
+    )
+    lm = build_model(cfg, vocab_multiple=vocab_multiple(parallel, mesh))
+    plan = make_plan(cfg, lm.registry, parallel, mesh)
+    state = init_state(lm.init(jax.random.PRNGKey(0)))
+    return cfg, lm, plan, state
+
+
+def default_mesh(data=4, model=2) -> MeshSpec:
+    return MeshSpec.from_dict({"data": data, "model": model})
+
+
+def state_nbytes(state) -> int:
+    return sum(x.nbytes for x in jax.tree.leaves(state.params)) * 3

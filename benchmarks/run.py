@@ -1,0 +1,46 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Run as::
+
+    PYTHONPATH=src python -m benchmarks.run [--only save_cost,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default="", help="comma-separated bench names")
+    args = p.parse_args()
+
+    from . import bench_checkpointing as B
+
+    benches = {
+        "save_cost": B.bench_save_cost,               # paper Fig. 11
+        "transform_load": B.bench_transform_load,     # paper Fig. 12
+        "conversion_scaling": B.bench_conversion_scaling,  # §3.2 Table 2
+        "correctness": B.bench_correctness,           # Fig. 6/7, Table 3
+    }
+    only = {s for s in args.only.split(",") if s}
+    print("name,us_per_call,derived")
+    failed = False
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            for row, us, derived in fn():
+                print(f"{row},{us:.0f},{derived}", flush=True)
+        except Exception:
+            failed = True
+            traceback.print_exc()
+            print(f"{name},NaN,ERROR", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Render EXPERIMENTS.md §Dry-run/§Roofline tables from results/dryrun.jsonl."""
+
+import json
+import sys
+from collections import defaultdict
+
+PEAK = 197e12
+HBM = 819e9
+LINK = 50e9
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}m"
+    return f"{x*1e6:.0f}µ"
+
+
+def load(path):
+    best = {}
+    for line in open(path):
+        line = line.strip()
+        if not line:
+            continue
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r["mesh"], r.get("tag", "baseline"))
+        best[key] = r  # last wins
+    return best
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl"
+    tag = sys.argv[2] if len(sys.argv) > 2 else "baseline"
+    recs = load(path)
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    archs = sorted({k[0] for k in recs})
+
+    print("### Dry-run status (lower+compile per cell)\n")
+    print("| arch | " + " | ".join(f"{s} 1pod / 2pod" for s in shapes) + " |")
+    print("|---|" + "---|" * len(shapes))
+    for a in archs:
+        row = [a]
+        for s in shapes:
+            cell = []
+            for mesh in ("16x16", "2x16x16"):
+                r = recs.get((a, s, mesh, tag))
+                if r is None:
+                    cell.append("…")
+                elif r.get("skipped"):
+                    cell.append("skip")
+                elif r.get("ok"):
+                    cell.append(f"OK({r.get('compile_s', '?')}s)")
+                else:
+                    cell.append("FAIL")
+            row.append(" / ".join(cell))
+        print("| " + " | ".join(row) + " |")
+
+    print("\n### Roofline (single-pod 16×16; seconds per step at v5e specs)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL/HLO | roofline frac | temp GB/chip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            r = recs.get((a, s, "16x16", tag))
+            if not r or r.get("skipped") or not r.get("ok"):
+                continue
+            t = r["roofline"]
+            mem = r.get("memory") or {}
+            print(
+                f"| {a} | {s} | {fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} | "
+                f"{fmt_s(t['collective_s'])} | {r['dominant'].replace('_s','')} | "
+                f"{r['useful_flops_ratio']:.2f} | {r['roofline_fraction']*100:.2f}% | "
+                f"{(mem.get('temp_bytes_per_device') or 0)/1e9:.1f} |"
+            )
+
+    # failures
+    fails = [(k, r) for k, r in recs.items() if not r.get("ok")]
+    if fails:
+        print("\n### Failures\n")
+        for k, r in fails:
+            print(f"- {k}: {r.get('error', '?')[:300]}")
+
+
+if __name__ == "__main__":
+    main()

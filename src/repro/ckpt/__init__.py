@@ -1,0 +1,8 @@
+from .manager import CheckpointManager, RestoreInfo
+from .restore import read_region_from_dist, state_from_dist, state_from_ucp
+from .saver import AsyncSaver, SaveResult, snapshot_state, write_distributed
+__all__ = [
+    "CheckpointManager", "RestoreInfo", "read_region_from_dist",
+    "state_from_dist", "state_from_ucp", "AsyncSaver", "SaveResult",
+    "snapshot_state", "write_distributed",
+]

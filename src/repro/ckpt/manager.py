@@ -1,0 +1,176 @@
+"""CheckpointManager: the policy layer tying saving, discovery and resume.
+
+Responsibilities:
+
+* periodic saves (sync or async/overlapped), atomic commit, keep-last-k GC;
+* discovery that skips uncommitted (crashed) checkpoint directories;
+* resume that implements the paper's *lazy* conversion: DIRECT per-rank
+  reads when the Target layout equals the Source, one-time conversion to a
+  cached UCP atom directory (``<step dir>.ucp``) when it does not;
+* the UCP cache is shared: five different Targets resuming from the same
+  Source convert once (hub-format property, paper §3.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Mapping
+
+import jax
+
+from repro.core.atoms import UcpCheckpoint
+from repro.core.convert import ConvertStats, convert_to_ucp
+from repro.core.dist_ckpt import DistCheckpoint
+from repro.core.plan import ResumeMode, TargetSpec, plan_resume
+from repro.dist.sharding import ShardingPlan
+from repro.train.optimizer import TrainState
+from .restore import RestoreStats, state_from_dist, state_from_ucp
+from .saver import AsyncSaver, SaveResult, snapshot_state, write_distributed
+
+__all__ = ["CheckpointManager", "RestoreInfo"]
+
+
+@dataclasses.dataclass
+class RestoreInfo:
+    step: int
+    mode: ResumeMode
+    reason: str
+    scalars: dict[str, Any]
+    convert_stats: ConvertStats | None
+    restore_stats: RestoreStats
+    wall_time_s: float
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        root: str | Path,
+        plan: ShardingPlan,
+        *,
+        keep_last: int = 3,
+        save_interval: int = 50,
+        async_save: bool = True,
+        config_fingerprint: Mapping[str, Any] | None = None,
+    ):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.plan = plan
+        self.keep_last = keep_last
+        self.save_interval = save_interval
+        self.config_fingerprint = dict(config_fingerprint or {})
+        self._async = AsyncSaver() if async_save else None
+
+    # ------------------------------------------------------------------ save
+    def step_dir(self, step: int) -> Path:
+        return self.root / f"step_{step:08d}"
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.save_interval == 0
+
+    def save(
+        self, state: TrainState, step: int, *, scalars: Mapping[str, Any] | None = None,
+        block: bool = False,
+    ) -> None:
+        kw = dict(
+            scalars=dict(scalars or {}),
+            config_fingerprint=self.config_fingerprint,
+        )
+        if self._async is not None and not block:
+            self._async.submit(state, self.plan, step, self.step_dir(step), **kw)
+        else:
+            snap = snapshot_state(state)
+            write_distributed(snap, self.plan, step, self.step_dir(step), **kw)
+        self.gc()
+
+    def wait(self) -> list[SaveResult]:
+        if self._async is None:
+            return []
+        res = self._async.wait()
+        self.gc()
+        return res
+
+    def close(self) -> None:
+        if self._async is not None:
+            self._async.close()
+
+    # ----------------------------------------------------------------- lookup
+    def steps(self) -> list[int]:
+        out = []
+        for p in sorted(self.root.glob("step_*")):
+            if p.is_dir() and not p.name.endswith(".ucp") and (p / "COMMIT").exists():
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def gc(self) -> None:
+        """Keep the newest ``keep_last`` committed checkpoints (+their UCP
+        caches); remove uncommitted wreckage older than the newest commit."""
+        steps = self.steps()
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(self.step_dir(s), ignore_errors=True)
+            shutil.rmtree(Path(str(self.step_dir(s)) + ".ucp"), ignore_errors=True)
+        if steps:
+            newest = self.step_dir(steps[-1])
+            for p in self.root.glob("step_*"):
+                if (
+                    p.is_dir()
+                    and not p.name.endswith(".ucp")
+                    and not (p / "COMMIT").exists()
+                    and p.name < newest.name
+                ):
+                    shutil.rmtree(p, ignore_errors=True)
+
+    # ---------------------------------------------------------------- restore
+    def restore(
+        self,
+        jmesh: jax.sharding.Mesh,
+        *,
+        step: int | None = None,
+        target_plan: ShardingPlan | None = None,
+        convert_workers: int = 4,
+    ) -> tuple[TrainState, RestoreInfo] | None:
+        """Resume onto ``jmesh`` under ``target_plan`` (default: own plan).
+
+        Returns None when no committed checkpoint exists (fresh start).
+        """
+        plan = target_plan or self.plan
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        t0 = time.perf_counter()
+        ckpt = DistCheckpoint.open(self.step_dir(step))
+        target = TargetSpec(plan.mesh, plan.param_specs)
+        rp = plan_resume(ckpt.manifest, target)
+        stats = RestoreStats()
+        cstats: ConvertStats | None = None
+        if rp.mode == ResumeMode.DIRECT:
+            state = state_from_dist(ckpt, plan, jmesh, stats)
+        else:
+            ucp_dir = Path(str(self.step_dir(step)) + ".ucp")
+            if (ucp_dir / "COMMIT").exists():
+                ucp = UcpCheckpoint.open(ucp_dir)
+            else:
+                shutil.rmtree(ucp_dir, ignore_errors=True)  # partial convert
+                ucp, cstats = convert_to_ucp(
+                    ckpt, str(ucp_dir), workers=convert_workers
+                )
+            state = state_from_ucp(ucp, plan, jmesh, stats)
+        info = RestoreInfo(
+            step=step,
+            mode=rp.mode,
+            reason=rp.reason,
+            scalars=dict(ckpt.manifest.scalars),
+            convert_stats=cstats,
+            restore_stats=stats,
+            wall_time_s=time.perf_counter() - t0,
+        )
+        return state, info

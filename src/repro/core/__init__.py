@@ -1,0 +1,61 @@
+"""Universal Checkpointing core: the paper's contribution, device-free.
+
+Public surface:
+
+* :mod:`repro.core.layout`   — shard geometry (mesh × spec → index maps)
+* :mod:`repro.core.patterns` — the UCP pattern language (Table 1)
+* :mod:`repro.core.dist_ckpt`/:mod:`repro.core.atoms` — on-disk formats
+* :mod:`repro.core.ops`      — Extract/Union/StripPadding/GenUcpMetadata/Load
+* :mod:`repro.core.convert`  — Algorithm 1 driver
+* :mod:`repro.core.plan`     — lazy reconfiguration planning
+
+Everything here is pure numpy: conversion runs offline, on any host,
+without Source or Target accelerators (paper §3.1).
+"""
+
+from .atoms import AtomInfo, UcpCheckpoint, UcpManifest
+from .convert import ConvertStats, convert_to_ucp
+from .dist_ckpt import DistCheckpoint, DistManifest
+from .layout import (
+    DimSpec,
+    IndexEntry,
+    MeshSpec,
+    ShardLayout,
+    SubFragment,
+    compute_layout,
+    normalize_partition_spec,
+)
+from .ops import (
+    LoadPlan,
+    ParamLoadPlan,
+    extract,
+    gen_ucp_metadata,
+    load_param_shard,
+    strip_padding,
+    union,
+)
+from .patterns import (
+    ParamSpec,
+    Pattern,
+    StateKind,
+    STATE_KINDS,
+    StateLayoutSpec,
+    derive_pattern,
+    uniform_param_spec,
+)
+from .plan import ResumeMode, ResumePlan, TargetSpec, direct_load_shard, plan_resume
+from .pytree import flatten_with_paths, tree_map_with_path, unflatten_from_paths
+
+__all__ = [
+    "AtomInfo", "UcpCheckpoint", "UcpManifest",
+    "ConvertStats", "convert_to_ucp",
+    "DistCheckpoint", "DistManifest",
+    "DimSpec", "IndexEntry", "MeshSpec", "ShardLayout", "SubFragment",
+    "compute_layout", "normalize_partition_spec",
+    "LoadPlan", "ParamLoadPlan", "extract", "gen_ucp_metadata",
+    "load_param_shard", "strip_padding", "union",
+    "ParamSpec", "Pattern", "StateKind", "STATE_KINDS", "StateLayoutSpec",
+    "derive_pattern", "uniform_param_spec",
+    "ResumeMode", "ResumePlan", "TargetSpec", "direct_load_shard", "plan_resume",
+    "flatten_with_paths", "tree_map_with_path", "unflatten_from_paths",
+]

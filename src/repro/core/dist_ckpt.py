@@ -1,0 +1,192 @@
+"""The *distributed* checkpoint format (the Source/Target side of UCP).
+
+Layout on disk::
+
+    <ckpt_dir>/step_<N>/
+        MANIFEST.json                      # mesh, param specs, scalars, config
+        ranks/rank_00000/<name>@<kind>.npy # local (padded) shard arrays
+        ...
+        COMMIT                             # written last: atomic completion
+
+Every rank persists exactly the shards it owns (paper §2: "each GPU is only
+responsible for checkpointing a fraction of the entire model state").
+Replicated fragments are deduplicated: only the lowest rank of each replica
+group writes (``save_mode="dedup"``), which is what production systems do
+for the DP dimension; ``save_mode="all"`` is kept for benchmarking the
+difference.
+
+Pipeline-parallel stage partitioning needs no special casing: a PP Source is
+simply a mesh with a ``pipe`` axis and stacked parameters sharded along it,
+so per-stage ownership falls out of the ordinary fragment layout
+(see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from pathlib import Path
+from typing import Any, Iterator, Mapping
+
+import numpy as np
+
+from .layout import MeshSpec, ShardLayout
+from .patterns import ParamSpec, StateKind
+from .tensor_io import dtype_name, load_tensor, save_tensor
+
+__all__ = ["DistManifest", "DistCheckpoint", "shard_filename", "FORMAT_VERSION"]
+
+FORMAT_VERSION = "repro-dist/v1"
+
+
+def shard_filename(name: str, kind: StateKind) -> str:
+    return f"{name}@{kind.value}.npy"
+
+
+@dataclasses.dataclass
+class DistManifest:
+    """Self-describing header of a distributed checkpoint.
+
+    ``scalars`` carries replicated small state (step counter, RNG key, data
+    iterator cursor, LR-schedule state) as plain JSON — these are
+    ``replicated_params`` in the paper's taxonomy but too small to matter
+    as tensors.
+    """
+
+    step: int
+    mesh: MeshSpec
+    params: dict[str, ParamSpec]
+    scalars: dict[str, Any]
+    config_fingerprint: dict[str, Any]
+    save_mode: str = "dedup"  # "dedup" | "all"
+    format_version: str = FORMAT_VERSION
+    created_at: float = 0.0
+
+    def to_json(self) -> dict:
+        return {
+            "format_version": self.format_version,
+            "step": self.step,
+            "mesh": self.mesh.to_json(),
+            "params": {n: p.to_json() for n, p in self.params.items()},
+            "scalars": self.scalars,
+            "config_fingerprint": self.config_fingerprint,
+            "save_mode": self.save_mode,
+            "created_at": self.created_at,
+        }
+
+    @classmethod
+    def from_json(cls, d: Mapping) -> "DistManifest":
+        if d.get("format_version") != FORMAT_VERSION:
+            raise ValueError(f"unsupported checkpoint format {d.get('format_version')!r}")
+        return cls(
+            step=int(d["step"]),
+            mesh=MeshSpec.from_json(d["mesh"]),
+            params={n: ParamSpec.from_json(p) for n, p in d["params"].items()},
+            scalars=dict(d["scalars"]),
+            config_fingerprint=dict(d["config_fingerprint"]),
+            save_mode=str(d.get("save_mode", "dedup")),
+            created_at=float(d.get("created_at", 0.0)),
+        )
+
+
+class DistCheckpoint:
+    """Reader/writer for one committed (or in-progress) distributed checkpoint."""
+
+    def __init__(self, root: str | os.PathLike, manifest: DistManifest):
+        self.root = Path(root)
+        self.manifest = manifest
+
+    # ------------------------------------------------------------------ paths
+    def rank_dir(self, rank: int) -> Path:
+        return self.root / "ranks" / f"rank_{rank:05d}"
+
+    def shard_path(self, rank: int, name: str, kind: StateKind) -> Path:
+        return self.rank_dir(rank) / shard_filename(name, kind)
+
+    @property
+    def commit_path(self) -> Path:
+        return self.root / "COMMIT"
+
+    @property
+    def is_committed(self) -> bool:
+        return self.commit_path.exists()
+
+    # ------------------------------------------------------------------ write
+    @classmethod
+    def create(cls, root: str | os.PathLike, manifest: DistManifest) -> "DistCheckpoint":
+        root = Path(root)
+        root.mkdir(parents=True, exist_ok=True)
+        manifest.created_at = time.time()
+        ckpt = cls(root, manifest)
+        tmp = root / "MANIFEST.json.tmp"
+        tmp.write_text(json.dumps(manifest.to_json(), indent=1))
+        os.replace(tmp, root / "MANIFEST.json")
+        return ckpt
+
+    def write_shard(
+        self, rank: int, name: str, kind: StateKind, shard: np.ndarray
+    ) -> int:
+        """Persist one rank's local shard; returns bytes written."""
+        self.rank_dir(rank).mkdir(parents=True, exist_ok=True)
+        save_tensor(self.shard_path(rank, name, kind), shard)
+        return shard.nbytes
+
+    def writing_ranks(self, name: str, kind: StateKind) -> list[int]:
+        """Which ranks persist this (param, kind) under the manifest save_mode."""
+        spec = self.manifest.params[name]
+        layout = spec.layout_for(kind, self.manifest.mesh)
+        if self.manifest.save_mode == "all" or spec.average:
+            # average params: every replica holds *different* data → no dedup.
+            return [r for r in layout.mesh.ranks() if layout.entries[r]]
+        return [r for r in layout.primary_ranks() if layout.entries[r]]
+
+    def commit(self) -> None:
+        """Atomic completion marker — written last, fsync'd.
+
+        A checkpoint directory without COMMIT is treated as garbage by
+        discovery (crash-during-save safety).
+        """
+        tmp = self.root / "COMMIT.tmp"
+        with open(tmp, "w") as f:
+            f.write(json.dumps({"step": self.manifest.step, "t": time.time()}))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.commit_path)
+
+    # ------------------------------------------------------------------- read
+    @classmethod
+    def open(cls, root: str | os.PathLike) -> "DistCheckpoint":
+        root = Path(root)
+        manifest = DistManifest.from_json(json.loads((root / "MANIFEST.json").read_text()))
+        return cls(root, manifest)
+
+    def read_shard(
+        self, rank: int, name: str, kind: StateKind, *, mmap: bool = True
+    ) -> np.ndarray:
+        spec = self.manifest.params[name]
+        return load_tensor(
+            self.shard_path(rank, name, kind),
+            dtype=spec.states[kind].dtype,
+            mmap=mmap,
+        )
+
+    def iter_param_fragments(
+        self, name: str, kind: StateKind
+    ) -> Iterator[tuple[int, ShardLayout, np.ndarray]]:
+        """Yield ``(rank, layout, shard)`` for every persisted fragment owner.
+
+        This is the read side of the paper's ``Extract`` — it enumerates the
+        parameter states contained in the distributed checkpoint, one owning
+        rank at a time, without materializing anything (mmap).
+        """
+        spec = self.manifest.params[name]
+        layout = spec.layout_for(kind, self.manifest.mesh)
+        for rank in self.writing_ranks(name, kind):
+            yield rank, layout, self.read_shard(rank, name, kind)
+
+    def total_bytes(self) -> int:
+        return sum(
+            p.stat().st_size for p in self.root.glob("ranks/**/*.npy")
+        )

@@ -1,0 +1,337 @@
+"""The UCP transformation operators (paper §3.2, Table 2).
+
+=================== =========================================================
+``extract``          enumerate the parameter states contained in a
+                     distributed checkpoint, per owning rank (lazy / mmap)
+``union``            consolidate one parameter's fragments into its atom,
+                     dispatching on the parameter pattern (Algorithm 1)
+``strip_padding``    remove alignment padding (runtime → logical shape) and
+                     collapse the replica dim of ``params_to_average``
+``gen_ucp_metadata`` compute the Target-side fragment geometry: which atom
+                     region lands where on which Target rank
+``load_param_shard`` materialize one Target rank's local shard from atoms,
+                     reading only the byte ranges it owns (mmap slices)
+=================== =========================================================
+
+All operators are pure numpy — conversion is an *offline* operation that
+needs neither the Source nor the Target hardware (paper §3.1: "lazily and
+on-demand").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, Mapping, Sequence
+
+import numpy as np
+
+from .atoms import AtomInfo, UcpCheckpoint
+from .dist_ckpt import DistCheckpoint
+from .layout import IndexEntry, MeshSpec, ShardLayout
+from .patterns import ParamSpec, Pattern, StateKind, STATE_KINDS
+from .tensor_io import resolve_dtype
+
+__all__ = [
+    "extract",
+    "union",
+    "strip_padding",
+    "gen_ucp_metadata",
+    "load_param_shard",
+    "LoadPlan",
+    "ParamLoadPlan",
+]
+
+
+# ---------------------------------------------------------------------------
+# Extract
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Fragment:
+    """One rank's persisted piece of one parameter state."""
+
+    name: str
+    kind: StateKind
+    rank: int
+    layout: ShardLayout
+    shard: np.ndarray  # usually an mmap view
+
+
+def extract(
+    ckpt: DistCheckpoint,
+    names: Sequence[str] | None = None,
+    kinds: Sequence[StateKind] = STATE_KINDS,
+) -> Iterator[Fragment]:
+    """Enumerate persisted fragments of a distributed checkpoint.
+
+    The on-disk format already stores one file per (rank, param, kind), so
+    Extract is an enumeration rather than a physical split — the paper's
+    Extract output ("each parameter state as individual checkpoint files")
+    is the invariant our *save* format maintains from the start.
+    """
+    manifest = ckpt.manifest
+    for name in names if names is not None else sorted(manifest.params):
+        for kind in kinds:
+            if kind not in manifest.params[name].states:
+                continue
+            for rank, layout, shard in ckpt.iter_param_fragments(name, kind):
+                yield Fragment(name, kind, rank, layout, shard)
+
+
+# ---------------------------------------------------------------------------
+# StripPadding
+# ---------------------------------------------------------------------------
+
+
+def strip_padding(runtime_atom: np.ndarray, spec: ParamSpec) -> np.ndarray:
+    """Runtime-shaped consolidated tensor → logical atom.
+
+    * crops per-dim alignment padding (``runtime_shape`` → ``logical_shape``)
+    * for ``params_to_average``: averages over the leading replica dim
+      (Algorithm 1, case params_to_average: ``Sum(fp_1..fp_n)/n``)
+    """
+    if spec.average:
+        body = runtime_atom.astype(np.float64).mean(axis=0)
+        body = body[tuple(slice(0, s) for s in spec.logical_shape)]
+        return body.astype(runtime_atom.dtype)
+    return runtime_atom[tuple(slice(0, s) for s in spec.logical_shape)]
+
+
+# ---------------------------------------------------------------------------
+# Union
+# ---------------------------------------------------------------------------
+
+
+def union(
+    ckpt: DistCheckpoint,
+    spec: ParamSpec,
+    kind: StateKind,
+    *,
+    out: np.ndarray | None = None,
+) -> np.ndarray:
+    """Consolidate one parameter state into its (logical) atom.
+
+    Pattern dispatch (Algorithm 1):
+
+    * ``replicated_params`` / ``unique_params`` — exactly one distinct
+      fragment exists; its primary rank's shard is the atom (``ucp_p = fp_1``)
+    * ``fragment_params`` — scatter every distinct fragment into place
+      (``Concat``), including fused sub-fragments and stage partitions
+    * ``params_to_average`` — assemble all replicas then mean
+
+    ``out``: optional pre-opened (mem-mapped) destination of *logical*
+    shape.  When given and the parameter needs no padding-strip or
+    averaging, fragments stream directly into it — constant working memory
+    regardless of parameter size.
+    """
+    mesh = ckpt.manifest.mesh
+    layout = spec.layout_for(kind, mesh)
+    dtype = resolve_dtype(spec.states[kind].dtype)
+    direct = (
+        out is not None
+        and not spec.average
+        and tuple(spec.runtime_shape) == tuple(spec.logical_shape)
+    )
+
+    if direct:
+        target = out
+    else:
+        target = np.zeros(spec.runtime_shape, dtype=dtype)
+
+    if spec.average:
+        # Every rank holds divergent data → read all owners, then average.
+        for rank, _, shard in ckpt.iter_param_fragments(spec.name, kind):
+            for e in layout.entries[rank]:
+                target[e.atom_index()] = shard[e.shard_index()]
+        atom = strip_padding(target, spec)
+    else:
+        for rank, _, shard in ckpt.iter_param_fragments(spec.name, kind):
+            for e in layout.entries[rank]:
+                target[e.atom_index()] = shard[e.shard_index()]
+        atom = target if direct else strip_padding(target, spec)
+
+    if out is not None and not direct:
+        out[...] = atom
+        atom = out
+    return atom
+
+
+# ---------------------------------------------------------------------------
+# GenUcpMetadata + Load
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamLoadPlan:
+    """Target-side geometry of one parameter state (paper: GenUcpMetadata).
+
+    ``entries[rank]`` maps regions of the *runtime* tensor to the rank's
+    local shard.  ``read_bytes(rank)`` is the exact I/O the rank performs —
+    this is what makes UCP Load bandwidth-proportional to the Target
+    partition size rather than the model size.
+    """
+
+    name: str
+    kind: StateKind
+    spec: ParamSpec
+    layout: ShardLayout
+    target_dtype: str
+
+    def read_bytes(self, rank: int) -> int:
+        item = resolve_dtype(self.target_dtype).itemsize
+        total = 0
+        for e in self.layout.entries[rank]:
+            region = _clip_to_logical(e, self.spec)
+            if region is not None:
+                total += math.prod(b - a for a, b in region[0]) * item
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class LoadPlan:
+    mesh: MeshSpec
+    params: dict[str, dict[StateKind, ParamLoadPlan]]
+
+    def total_read_bytes(self, rank: int) -> int:
+        return sum(
+            p.read_bytes(rank) for kinds in self.params.values() for p in kinds.values()
+        )
+
+
+def gen_ucp_metadata(
+    target_params: Mapping[str, ParamSpec],
+    target_mesh: MeshSpec,
+    atoms: Mapping[str, AtomInfo] | None = None,
+) -> LoadPlan:
+    """Compute partition metadata for every (param, kind) on the Target.
+
+    When ``atoms`` (the UCP manifest index) is provided, target specs are
+    validated against it: the logical shapes must agree — mesh, padding,
+    fusion and precision may all differ.
+    """
+    plans: dict[str, dict[StateKind, ParamLoadPlan]] = {}
+    for name, spec in target_params.items():
+        if atoms is not None:
+            if name not in atoms:
+                raise KeyError(f"target parameter {name!r} has no atom in checkpoint")
+            if tuple(atoms[name].logical_shape) != tuple(spec.logical_shape):
+                raise ValueError(
+                    f"{name}: atom logical shape {atoms[name].logical_shape} != "
+                    f"target logical shape {spec.logical_shape}"
+                )
+        per_kind: dict[StateKind, ParamLoadPlan] = {}
+        for kind, st in spec.states.items():
+            per_kind[kind] = ParamLoadPlan(
+                name=name,
+                kind=kind,
+                spec=spec,
+                layout=spec.layout_for(kind, target_mesh),
+                target_dtype=st.dtype,
+            )
+        plans[name] = per_kind
+    return LoadPlan(mesh=target_mesh, params=plans)
+
+
+def _clip_to_logical(
+    entry: IndexEntry, spec: ParamSpec
+) -> tuple[tuple[tuple[int, int], ...], tuple[tuple[int, int], ...]] | None:
+    """Clip a runtime-coordinate entry to the atom's logical region.
+
+    Returns ``(atom_region, shard_region)`` — the logical-tensor region to
+    read and where it lands in the local shard — or None when the entry lies
+    entirely in padding.  For average params the leading replica dim is
+    dropped on the atom side (broadcast on load).
+    """
+    atom_sl = entry.atom_slice
+    shard_sl = entry.shard_slice
+    if spec.average:
+        atom_sl = atom_sl[1:]
+        body_logical = spec.logical_shape
+    else:
+        body_logical = spec.logical_shape
+
+    a_out: list[tuple[int, int]] = []
+    s_out: list[tuple[int, int]] = []
+    body_shard = shard_sl[1:] if spec.average else shard_sl
+    for (a0, a1), (s0, s1), lim in zip(atom_sl, body_shard, body_logical):
+        c1 = min(a1, lim)
+        if c1 <= a0:
+            return None
+        a_out.append((a0, c1))
+        s_out.append((s0, s0 + (c1 - a0)))
+    if spec.average:
+        # every replica row of the shard receives the same logical data
+        s_out.insert(0, shard_sl[0])
+    return tuple(a_out), tuple(s_out)
+
+
+def read_runtime_region(
+    atom: np.ndarray,
+    spec: ParamSpec,
+    region: tuple[slice, ...],
+    dtype,
+) -> np.ndarray:
+    """Read an arbitrary runtime-coordinate region from a logical atom.
+
+    This is the Load primitive behind ``jax.make_array_from_callback``-based
+    restore: JAX hands us each device's index into the *runtime* array; we
+    serve it from the atom (mmap slice), zero-filling alignment padding and
+    broadcasting the replica dim of ``params_to_average`` parameters.
+    """
+    rt = spec.runtime_shape
+    region = tuple(
+        slice(*r.indices(s)) for r, s in zip(region, rt)
+    )
+    shape = tuple(r.stop - r.start for r in region)
+    out = np.zeros(shape, dtype=resolve_dtype(dtype))
+    body = region[1:] if spec.average else region
+    reads: list[slice] = []
+    dests: list[slice] = []
+    for r, lim in zip(body, spec.logical_shape):
+        hi = min(r.stop, lim)
+        if hi <= r.start:
+            return out  # region entirely inside padding
+        reads.append(slice(r.start, hi))
+        dests.append(slice(0, hi - r.start))
+    piece = np.asarray(atom[tuple(reads)], dtype=out.dtype)
+    if spec.average:
+        out[(slice(None), *dests)] = piece[None]
+    else:
+        out[tuple(dests)] = piece
+    return out
+
+
+def load_param_shard(
+    ucp: UcpCheckpoint,
+    plan: ParamLoadPlan,
+    rank: int,
+    *,
+    atom: np.ndarray | None = None,
+) -> np.ndarray:
+    """Materialize one Target rank's local shard of one parameter state.
+
+    Reads only the mmap slices the rank owns; fills alignment padding with
+    zeros; broadcasts averaged atoms across the Target's replica dim; casts
+    to the Target precision policy (fp32 atoms → bf16 Target, etc.).
+    """
+    spec = plan.spec
+    dtype = resolve_dtype(plan.target_dtype)
+    local = np.zeros(plan.layout.local_shape, dtype=dtype)
+    if atom is None:
+        atom = ucp.read_atom(plan.name, plan.kind)
+    for e in plan.layout.entries[rank]:
+        clipped = _clip_to_logical(e, spec)
+        if clipped is None:
+            continue
+        atom_region, shard_region = clipped
+        piece = atom[tuple(slice(a, b) for a, b in atom_region)]
+        dst = tuple(slice(a, b) for a, b in shard_region)
+        if spec.average:
+            local[dst] = np.broadcast_to(
+                piece.astype(dtype), tuple(b - a for a, b in shard_region)
+            )
+        else:
+            local[dst] = piece.astype(dtype)
+    return local

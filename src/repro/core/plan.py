@@ -1,0 +1,133 @@
+"""Reconfiguration planning: decide *how* to resume from what exists on disk.
+
+The paper's key efficiency claim is that UCP conversion is lazy: when the
+Target parallelism equals the Source, resume takes the fast path (each rank
+reads its own shard files back, zero transformation); only when the layout
+actually changed does the Source get converted to atoms and re-fragmented.
+
+``plan_resume`` encodes that decision:
+
+    Source layout == Target layout  →  DIRECT   (per-rank shard reads)
+    otherwise                       →  VIA_UCP  (convert once, then Load)
+
+Layout equality is structural — mesh axes/sizes, per-state dims, runtime
+shapes, dtypes — not object identity, so e.g. a restart on identical
+hardware after a crash is always DIRECT even though every Python object was
+rebuilt from scratch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Mapping
+
+import numpy as np
+
+from .dist_ckpt import DistCheckpoint, DistManifest
+from .layout import MeshSpec
+from .ops import LoadPlan, gen_ucp_metadata
+from .patterns import ParamSpec, StateKind
+from .tensor_io import resolve_dtype
+
+__all__ = ["ResumeMode", "TargetSpec", "ResumePlan", "plan_resume", "direct_load_shard"]
+
+
+class ResumeMode(str, enum.Enum):
+    DIRECT = "direct"     # same layout: per-rank shard reads, no conversion
+    VIA_UCP = "via_ucp"   # layout changed: convert to atoms, then UCP Load
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetSpec:
+    """What the resuming run wants: its mesh and its parameter layouts."""
+
+    mesh: MeshSpec
+    params: Mapping[str, ParamSpec]
+
+
+def _state_layouts_equal(a: ParamSpec, b: ParamSpec) -> bool:
+    if tuple(a.runtime_shape) != tuple(b.runtime_shape):
+        return False
+    if tuple(a.logical_shape) != tuple(b.logical_shape):
+        return False
+    if a.average != b.average:
+        return False
+    if set(a.states) != set(b.states):
+        return False
+    for kind in a.states:
+        sa, sb = a.states[kind], b.states[kind]
+        if sa.dtype != sb.dtype:
+            return False
+        if sa.dims != sb.dims:
+            return False
+    return True
+
+
+def layouts_equal(source: DistManifest, target: TargetSpec) -> bool:
+    if source.mesh != target.mesh:
+        return False
+    if set(source.params) != set(target.params):
+        return False
+    return all(
+        _state_layouts_equal(source.params[n], target.params[n]) for n in source.params
+    )
+
+
+@dataclasses.dataclass
+class ResumePlan:
+    mode: ResumeMode
+    source_step: int
+    load_plan: LoadPlan  # target-side geometry (valid for both modes)
+    reason: str = ""
+
+
+def plan_resume(source: DistManifest, target: TargetSpec) -> ResumePlan:
+    """Choose the resume path and precompute the Target geometry."""
+    plan = gen_ucp_metadata(dict(target.params), target.mesh)
+    if layouts_equal(source, target):
+        return ResumePlan(
+            mode=ResumeMode.DIRECT,
+            source_step=source.step,
+            load_plan=plan,
+            reason="source and target layouts are structurally identical",
+        )
+    diffs = []
+    if source.mesh != target.mesh:
+        diffs.append(
+            f"mesh {dict(source.mesh.axes)} -> {dict(target.mesh.axes)}"
+        )
+    changed = [
+        n
+        for n in source.params
+        if n in target.params
+        and not _state_layouts_equal(source.params[n], target.params[n])
+    ]
+    if changed:
+        diffs.append(f"{len(changed)} param layouts changed (e.g. {changed[0]})")
+    return ResumePlan(
+        mode=ResumeMode.VIA_UCP,
+        source_step=source.step,
+        load_plan=plan,
+        reason="; ".join(diffs) or "parameter set changed",
+    )
+
+
+def direct_load_shard(
+    ckpt: DistCheckpoint, name: str, kind: StateKind, rank: int
+) -> np.ndarray:
+    """Fast-path read of one rank's shard.
+
+    Under ``save_mode="dedup"`` only the primary rank of each replica group
+    persisted the bytes; any other replica reads the primary's file (same
+    content by definition of replication).
+    """
+    spec = ckpt.manifest.params[name]
+    layout = spec.layout_for(kind, ckpt.manifest.mesh)
+    frag = layout.fragment_id[rank]
+    owner = layout.ranks_for_fragment(frag)[0]
+    if ckpt.manifest.save_mode == "all" or spec.average:
+        owner = rank
+    shard = np.asarray(ckpt.read_shard(owner, name, kind))
+    want = resolve_dtype(spec.states[kind].dtype)
+    return shard.astype(want, copy=False)

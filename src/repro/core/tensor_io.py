@@ -1,0 +1,93 @@
+"""Tensor file I/O for checkpoints: ``.npy`` with dtype-faithful views.
+
+``.npy`` is used for both distributed shard files and consolidated atom
+files because ``np.load(..., mmap_mode="r")`` gives lazy page-granular
+reads: a Target rank loading a slice of an atom touches only the byte
+range it owns.  This is the CPU-host analogue of the paper's DeepNVMe
+fast-path (§Table 2, ``Load``) — sequential, offset-addressed reads.
+
+NumPy cannot represent ``bfloat16`` natively; ``ml_dtypes`` extends it, but
+round-trips through ``.npy`` as an anonymous 2-byte void.  We therefore
+persist the logical dtype in the filename-adjacent metadata and re-view on
+read.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+import numpy as np
+
+try:  # ml_dtypes ships with jax; core stays importable without it.
+    import ml_dtypes
+
+    _EXTENDED: dict[str, np.dtype] = {
+        "bfloat16": np.dtype(ml_dtypes.bfloat16),
+        "float8_e4m3fn": np.dtype(ml_dtypes.float8_e4m3fn),
+        "float8_e5m2": np.dtype(ml_dtypes.float8_e5m2),
+    }
+except ImportError:  # pragma: no cover
+    _EXTENDED = {}
+
+__all__ = ["resolve_dtype", "dtype_name", "save_tensor", "load_tensor", "open_memmap"]
+
+
+def resolve_dtype(name: str) -> np.dtype:
+    if name in _EXTENDED:
+        return _EXTENDED[name]
+    return np.dtype(name)
+
+
+def dtype_name(dtype) -> str:
+    dt = np.dtype(dtype)
+    for name, ext in _EXTENDED.items():
+        if dt == ext:
+            return name
+    return dt.name
+
+
+def save_tensor(path: str | os.PathLike, arr: np.ndarray) -> None:
+    """Atomically write an array (tmp + rename) so readers never see torn files."""
+    path = Path(path)
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    with open(tmp, "wb") as f:
+        np.save(f, np.ascontiguousarray(arr))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def load_tensor(
+    path: str | os.PathLike, dtype: str | None = None, *, mmap: bool = True
+) -> np.ndarray:
+    """Load (lazily when ``mmap``) and restore the logical dtype if needed."""
+    arr = np.load(path, mmap_mode="r" if mmap else None)
+    if dtype is not None:
+        want = resolve_dtype(dtype)
+        if arr.dtype != want:
+            if arr.dtype.itemsize != want.itemsize:
+                raise ValueError(
+                    f"{path}: stored itemsize {arr.dtype.itemsize} cannot view "
+                    f"as {dtype} (itemsize {want.itemsize})"
+                )
+            arr = arr.view(want)
+    return arr
+
+
+def open_memmap(
+    path: str | os.PathLike, shape: tuple[int, ...], dtype: str
+) -> np.memmap:
+    """Writable memmap for streaming, constant-memory Union (see convert.py)."""
+    dt = resolve_dtype(dtype)
+    # np.lib.format rejects extended dtypes on header write; use the raw
+    # void view on disk, callers see the logical dtype through .view().
+    disk_dt = dt if dt.name in np.sctypeDict or dt.kind in "fiub" else None
+    try:
+        mm = np.lib.format.open_memmap(str(path), mode="w+", dtype=dt, shape=shape)
+        return mm
+    except (ValueError, TypeError):
+        mm = np.lib.format.open_memmap(
+            str(path), mode="w+", dtype=np.dtype((np.void, dt.itemsize)), shape=shape
+        )
+        return mm.view(dt)

@@ -1,0 +1,3 @@
+from .planner import param_count, propose_mesh, state_bytes_per_chip
+from .resume import ElasticEvent, rebuild_on
+__all__ = ["param_count", "propose_mesh", "state_bytes_per_chip", "ElasticEvent", "rebuild_on"]

@@ -1,0 +1,74 @@
+"""Elastic-capacity planning: healthy-device count → new mesh proposal.
+
+The paper's headline scenario (§1, Fig. 1): chips fail mid-run, the job
+must continue on whatever is left.  The planner proposes the largest
+feasible ``data × model`` mesh for the surviving devices, subject to a
+per-chip HBM budget for the model's training state; the trainer then
+resumes through UCP (the Source layout never constrains the choice).
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.configs.base import ModelConfig
+from repro.core.layout import MeshSpec
+
+__all__ = ["propose_mesh", "state_bytes_per_chip", "param_count"]
+
+HBM_BYTES = 16e9          # TPU v5e
+_STATE_BYTES_PER_PARAM = {
+    # fp32 master + 2 moments (+bf16 live copy amortized into activations)
+    "float32": 12.0,
+    "bfloat16": 8.0,      # fp32 master + 2 bf16 moments
+}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Analytic parameter count (matches the registry within ~1%)."""
+    from repro.models.lm import build_param_defs
+
+    reg = build_param_defs(cfg, cfg.vocab_size)
+    return reg.num_params()
+
+
+def state_bytes_per_chip(
+    cfg: ModelConfig, mesh: MeshSpec, *, moment_dtype: str = "float32"
+) -> float:
+    n = param_count(cfg)
+    per_param = _STATE_BYTES_PER_PARAM.get(moment_dtype, 12.0)
+    return n * per_param / mesh.size  # fully sharded (ZeRO-3 + TP)
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (n.bit_length() - 1) if n > 0 else 0
+
+
+def propose_mesh(
+    cfg: ModelConfig,
+    healthy_devices: int,
+    *,
+    moment_dtype: str = "float32",
+    max_model: int = 16,
+    hbm_budget: float = 0.8 * HBM_BYTES,
+) -> MeshSpec:
+    """Largest power-of-two ``data × model`` mesh on the healthy devices.
+
+    The model axis is sized so per-chip weight shards stay comfortable
+    (wider TP for wider models), the data axis takes the rest; infeasible
+    proposals (state doesn't fit HBM) grow the mesh utilization preference
+    toward more chips per replica.
+    """
+    if healthy_devices < 1:
+        raise ValueError("no healthy devices")
+    usable = _pow2_floor(healthy_devices)
+    model = min(max_model, usable, max(1, _pow2_floor(cfg.d_model // 512)))
+    while model <= usable:
+        data = usable // model
+        mesh = MeshSpec((("data", data), ("model", model)))
+        if state_bytes_per_chip(cfg, mesh, moment_dtype=moment_dtype) <= hbm_budget:
+            return mesh
+        model *= 2
+    # even full TP doesn't fit: return the flattest mesh and let the caller
+    # escalate (e.g. bf16 moments or parameter offload)
+    return MeshSpec((("data", 1), ("model", usable)))

@@ -1,0 +1,59 @@
+"""Elastic resume orchestration: failure → plan → UCP reconfigure → continue.
+
+This is the glue a cluster controller would call after detecting node
+failures (or receiving opportunistic capacity):
+
+    new_mesh_spec = propose_mesh(cfg, healthy_device_count)
+    trainer = rebuild_trainer(..., new_mesh)
+    state, info = trainer.init_or_restore()   # DIRECT or VIA_UCP, automatic
+
+On real hardware, failure detection comes from the platform (missing
+heartbeats / NCCL-equivalent timeouts / preemption notices); in this
+repository it is driven explicitly by the examples and tests
+(``examples/elastic_resume.py`` kills a run and resumes on a different
+simulated device count).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.configs.base import ModelConfig, ParallelismConfig, TrainConfig
+from repro.train.trainer import Trainer
+from .planner import propose_mesh
+
+__all__ = ["rebuild_on", "ElasticEvent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticEvent:
+    """A capacity change the controller reacts to."""
+
+    healthy_devices: int
+    reason: str  # "failure" | "scale_up" | "scale_down"
+
+
+def rebuild_on(
+    event: ElasticEvent,
+    cfg: ModelConfig,
+    parallel: ParallelismConfig,
+    tcfg: TrainConfig,
+    *,
+    batch_size: int,
+    seq_len: int,
+    ckpt_dir: str,
+) -> Trainer:
+    """Build a trainer for the post-event topology.
+
+    The returned trainer's ``init_or_restore`` transparently reconfigures
+    the latest checkpoint through UCP if the layout changed.
+    """
+    mesh_spec = propose_mesh(cfg, event.healthy_devices,
+                             moment_dtype=parallel.moment_dtype)
+    jmesh = jax.make_mesh(mesh_spec.shape, mesh_spec.axis_names)
+    return Trainer.create(
+        cfg, parallel, tcfg, jmesh,
+        batch_size=batch_size, seq_len=seq_len, ckpt_dir=ckpt_dir,
+    )

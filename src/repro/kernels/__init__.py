@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package has three layers:
+
+* ``kernel.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling
+* ``ops.py``    — jitted public wrapper in model tensor layouts
+* ``ref.py``    — pure-jnp oracle the kernel is validated against
+
+On this CPU container kernels run under ``interpret=True``; on a TPU
+runtime the same calls compile to Mosaic.  The dry-run lowers the jnp
+reference path (Pallas does not lower on the CPU backend) — see
+EXPERIMENTS.md §Roofline for how kernel-level wins are accounted.
+"""

@@ -1,0 +1,150 @@
+"""Flash-attention forward Pallas TPU kernel.
+
+Grid ``(batch, q_heads, num_q_blocks, num_kv_blocks)`` with the KV block
+dimension innermost and sequential: the online-softmax running state
+(m, l, acc) lives in VMEM scratch that persists across KV iterations of one
+(q-block, head, batch) cell — the TPU-native replacement for the CUDA
+shared-memory tiling of the original flash attention.
+
+Features: causal masking, sliding windows (Mixtral/Gemma local layers),
+GQA (KV-head index derived in the BlockSpec index map, so no materialized
+head repetition), and block-level early-out (``pl.when``) for fully-masked
+tiles — the compute saving the chunked-jnp reference cannot express.
+
+Block shapes are MXU-aligned (multiples of 128 on the sequence dims; the
+head dim rides whole). VMEM budget per cell:
+``block_q·d + 2·block_k·d + block_q·block_k + 3·block_q`` floats —
+(512, 1024) blocks with d=128 ≈ 1.3 MB, well under the ~16 MB/core VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd"]
+
+_NEG_INF = -2.0e38
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, window: int,
+    block_q: int, block_k: int, num_kv_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kv_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    diff = q_pos - kv_pos
+
+    # Block-level skip: with causal masking, KV blocks strictly in the
+    # future (and, with a window, strictly before it) contribute nothing.
+    needed = jnp.asarray(True)
+    if causal:
+        needed = needed & (ki * block_k <= qi * block_q + block_q - 1)
+    if window > 0:
+        needed = needed & ((qi * block_q) - (ki * block_k + block_k - 1) < window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # [block_q, d]
+        k = k_ref[0, 0].astype(jnp.float32)      # [block_k, d]
+        v = v_ref[0, 0].astype(jnp.float32)      # [block_k, dv]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= diff >= 0
+        if window > 0:
+            mask &= diff < window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-37)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,      # [B, Hq, Sq, D]
+    k: jax.Array,      # [B, Hkv, Skv, D]
+    v: jax.Array,      # [B, Hkv, Skv, Dv]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = 512,
+    block_k: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    groups = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    if sq % block_q or skv % block_k:
+        raise ValueError(f"sequence ({sq},{skv}) not divisible by blocks "
+                         f"({block_q},{block_k})")
+    nq, nk = sq // block_q, skv // block_k
+
+    kernel = functools.partial(
+        _fwd_kernel,
+        scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+    )
+    grid = (b, hq, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda b_, h, qi, ki, _g=groups: (b_, h // _g, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, dv),
+                lambda b_, h, qi, ki, _g=groups: (b_, h // _g, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, dv), lambda b_, h, qi, ki: (b_, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

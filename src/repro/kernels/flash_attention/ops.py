@@ -1,0 +1,44 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Accepts model-layout tensors ``[B, S, H, D]`` (matching
+``repro.models.attention``), transposes to the kernel's ``[B, H, S, D]``
+layout, and dispatches to the Pallas kernel (``interpret=True`` executes
+the kernel body on CPU for validation; on a TPU runtime ``interpret=False``
+compiles to Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention_fwd
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,  # [B, Skv, Hkv, Dv]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_fwd(
+        qt, kt, vt,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return o.transpose(0, 2, 1, 3)

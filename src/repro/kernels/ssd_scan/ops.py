@@ -1,0 +1,36 @@
+"""Jitted public wrapper for the SSD chunk-scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan_fwd
+
+__all__ = ["ssd_scan"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,   # [B, S, H, P]  (model layout)
+    dt: jax.Array,  # [B, S, H]
+    a: jax.Array,   # [H]
+    b: jax.Array,   # [B, S, G, N]
+    c: jax.Array,   # [B, S, G, N]
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,H,P], h_final [B,H,P,N]); broadcasts groups → heads."""
+    bsz, s, h, p = x.shape
+    g = b.shape[2]
+    rep = h // g
+    bb = jnp.repeat(b, rep, axis=2).transpose(0, 2, 1, 3)
+    cc = jnp.repeat(c, rep, axis=2).transpose(0, 2, 1, 3)
+    y, hT = ssd_scan_fwd(
+        x.transpose(0, 2, 1, 3), dt.transpose(0, 2, 1), a, bb, cc,
+        chunk=chunk, interpret=interpret,
+    )
+    return y.transpose(0, 2, 1, 3), hT

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: the O(S) recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_ref"]
+
+
+def ssd_ref(
+    x: jax.Array,   # [B, H, S, P]
+    dt: jax.Array,  # [B, H, S]
+    a: jax.Array,   # [H] (negative)
+    b: jax.Array,   # [B, H, S, N]
+    c: jax.Array,   # [B, H, S, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_tᵀ;  y_t = C_t·h_t."""
+    bsz, h, s, p = x.shape
+    n = b.shape[-1]
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(hs, t):
+        xt = x[:, :, t].astype(jnp.float32)
+        dtt = dt[:, :, t].astype(jnp.float32)
+        bt = b[:, :, t].astype(jnp.float32)
+        ct = c[:, :, t].astype(jnp.float32)
+        decay = jnp.exp(dtt * a[None, :])[..., None, None]
+        hs = hs * decay + (dtt[..., None, None] * xt[..., :, None]) * bt[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", hs, ct)
+        return hs, y
+
+    hT, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    return ys.transpose(1, 2, 0, 3).astype(x.dtype), hT

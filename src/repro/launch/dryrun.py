@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count at first
+# initialization, and the production meshes below need 512 placeholders.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+
+1. builds the production mesh (16×16 single-pod, or 2×16×16 multi-pod),
+2. constructs the model, sharding plan and the jitted step function
+   (train_step / prefill / serve_step per the shape kind),
+3. ``.lower(**abstract inputs).compile()`` — success proves the sharding
+   configuration is coherent (no mismatched specs, no unsupported
+   collectives, compile-time-known memory),
+4. prints ``memory_analysis()`` / ``cost_analysis()`` and runs the
+   trip-count-aware HLO analyzer to extract executed FLOPs / bytes /
+   collective bytes for the roofline table (EXPERIMENTS.md §Roofline),
+5. appends a JSON record to ``--out``.
+
+Usage::
+
+    python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k \
+        --out results/dryrun.jsonl
+    python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k \
+        --multi-pod --out results/dryrun.jsonl
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+# TPU v5e constants (assignment-provided)
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+LINK_BW = 50e9           # B/s / link (ICI)
+
+# Per-arch parallelism overrides for the production mesh.
+ARCH_OVERRIDES = {
+    "deepseek-v2-236b": dict(moment_dtype="bfloat16", grad_accum=16),
+    "jamba-1.5-large-398b": dict(moment_dtype="bfloat16", grad_accum=16),
+    "mixtral-8x22b": dict(grad_accum=16),
+    "gemma3-27b": dict(grad_accum=16),
+    "gemma3-12b": dict(grad_accum=16),
+    "llama-3.2-vision-11b": dict(grad_accum=16),
+    "minitron-8b": dict(grad_accum=16),
+    "smollm-360m": dict(grad_accum=16),
+    "mamba2-130m": dict(grad_accum=8),
+    "whisper-tiny": dict(grad_accum=4),
+    "gpt3-350m": dict(grad_accum=8),
+}
+
+
+def active_params(lm) -> tuple[int, int]:
+    """(total, active) parameter counts; active discounts non-routed experts."""
+    import math
+
+    cfg = lm.cfg
+    total = active = 0
+    for d in lm.registry:
+        n = math.prod(d.shape)
+        total += n
+        if d.kind == "moe_expert" and cfg.moe is not None:
+            active += n * cfg.moe.top_k / cfg.moe.num_experts
+        else:
+            active += n
+    return total, int(active)
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, args):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import SHAPES, ParallelismConfig, TrainConfig, get_config
+    from repro.core.layout import MeshSpec
+    from repro.core.pytree import unflatten_from_paths
+    from repro.dist.sharding import (
+        cache_pspecs,
+        make_plan,
+        make_sharder,
+        vocab_multiple,
+    )
+    from repro.models import build_model, input_specs
+    from repro.models import decode as decode_lib
+    from repro.launch.mesh import make_production_mesh
+    from repro.train.optimizer import TrainState
+    from repro.train.steps import make_prefill_step, make_serve_step, make_train_step
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+
+    # applicability gates (DESIGN.md §4)
+    if shape_name == "long_500k" and not cfg.supports_long_decode:
+        return {"skip": "full-attention arch: long_500k requires sub-quadratic"}
+    if arch == "whisper-tiny" and shape_name == "long_500k":
+        return {"skip": "enc-dec 448-token decoder: 500k decode not meaningful"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mspec = MeshSpec.from_mesh(mesh)
+    over = dict(ARCH_OVERRIDES.get(arch, {}))
+    if args.grad_accum:
+        over["grad_accum"] = args.grad_accum
+    if args.moment_dtype:
+        over["moment_dtype"] = args.moment_dtype
+    parallel = ParallelismConfig(
+        data_axes=("pod", "data") if multi_pod else ("data",),
+        remat=args.remat,
+        **over,
+    )
+    if shape.kind != "train":
+        parallel = dataclasses.replace(parallel, grad_accum=1)
+    if args.param_dtype:
+        parallel = dataclasses.replace(parallel, param_dtype=args.param_dtype)
+    if args.no_fsdp:
+        parallel = dataclasses.replace(parallel, fsdp=False)
+    if args.cast_params:
+        parallel = dataclasses.replace(parallel, cast_params_once=True)
+    if args.shard_cache_seq:
+        parallel = dataclasses.replace(parallel, shard_cache_seq=True)
+
+    lm = build_model(
+        cfg,
+        vocab_multiple=vocab_multiple(parallel, mspec),
+        remat=parallel.remat if shape.kind == "train" else "none",
+        shard=make_sharder(parallel, mesh),
+    )
+    plan = make_plan(cfg, lm.registry, parallel, mspec)
+
+    # ---- abstract inputs ---------------------------------------------------
+    pdt = jnp.dtype(parallel.param_dtype)
+    params_abs = unflatten_from_paths(
+        {d.path: jax.ShapeDtypeStruct(d.shape, pdt) for d in lm.registry}
+    )
+    pspecs = plan.state_pspecs()
+    mk = lambda specs: unflatten_from_paths(
+        {n: NamedSharding(mesh, s) for n, s in specs.items()}
+    )
+    params_sh = mk(pspecs["params"])
+    batch_abs = input_specs(cfg, shape)
+    data_axes = tuple(a for a in parallel.data_axes if mspec.has_axis(a))
+    dspec = data_axes if len(data_axes) != 1 else data_axes[0]
+    import math as _math
+
+    dsize = _math.prod(mspec.axis_size(a) for a in data_axes) if data_axes else 1
+    batch_sh = {
+        k: NamedSharding(
+            mesh,
+            P(dspec if v.shape[0] % dsize == 0 else None,
+              *([None] * (len(v.shape) - 1))),
+        )
+        for k, v in batch_abs.items()
+    }
+
+    if shape.kind == "train":
+        mdt = jnp.dtype(parallel.moment_dtype)
+        state_abs = TrainState(
+            params=params_abs,
+            exp_avg=jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, mdt), params_abs
+            ),
+            exp_avg_sq=jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, mdt), params_abs
+            ),
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+        )
+        state_sh = TrainState(
+            params=params_sh,
+            exp_avg=mk(pspecs["exp_avg"]),
+            exp_avg_sq=mk(pspecs["exp_avg_sq"]),
+            step=NamedSharding(mesh, P()),
+        )
+        fn = make_train_step(lm, TrainConfig(), parallel)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        lower_args = (state_abs, batch_abs)
+    else:
+        cache_abs = jax.eval_shape(
+            lambda: decode_lib.init_cache(lm, shape.global_batch, shape.seq_len)
+        )
+        cps = cache_pspecs(cache_abs, parallel, mspec)
+        cache_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), cps,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        if shape.kind == "prefill":
+            fn = make_prefill_step(lm)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(params_sh, cache_sh, batch_sh["tokens"])
+                + ((batch_sh.get("source_embeds"),) if "source_embeds" in batch_sh else ()),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            )
+            lower_args = (params_abs, cache_abs, batch_abs["tokens"]) + (
+                (batch_abs["source_embeds"],) if "source_embeds" in batch_abs else ()
+            )
+        else:
+            fn = make_serve_step(lm)
+            jitted = jax.jit(
+                fn,
+                in_shardings=(params_sh, cache_sh, batch_sh["tokens"]),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            )
+            lower_args = (params_abs, cache_abs, batch_abs["tokens"])
+
+    return {
+        "jitted": jitted,
+        "lower_args": lower_args,
+        "lm": lm,
+        "shape": shape,
+        "mesh_axes": dict(mspec.axes),
+        "chips": mspec.size,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, args) -> dict:
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "ok": False,
+    }
+    t_start = time.time()
+    built = build_cell(arch, shape_name, multi_pod, args)
+    if "skip" in built:
+        rec.update(skipped=True, skip_reason=built["skip"], ok=True)
+        return rec
+
+    jitted, lower_args = built["jitted"], built["lower_args"]
+    chips = built["chips"]
+
+    t0 = time.time()
+    lowered = jitted.lower(*lower_args)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    ma = compiled.memory_analysis()
+    print(f"[{arch} × {shape_name} × {rec['mesh']}] memory_analysis:", ma)
+    rec["memory"] = {
+        "argument_bytes_per_device": getattr(ma, "argument_size_in_bytes", None),
+        "output_bytes_per_device": getattr(ma, "output_size_in_bytes", None),
+        "temp_bytes_per_device": getattr(ma, "temp_size_in_bytes", None),
+        "alias_bytes_per_device": getattr(ma, "alias_size_in_bytes", None),
+    }
+    ca = compiled.cost_analysis()
+    print(f"[{arch} × {shape_name} × {rec['mesh']}] cost_analysis flops:",
+          ca.get("flops"), "bytes:", ca.get("bytes accessed"))
+    rec["xla_cost_analysis"] = {
+        "flops_static": ca.get("flops"),
+        "bytes_static": ca.get("bytes accessed"),
+    }
+
+    t0 = time.time()
+    txt = compiled.as_text()
+    costs = analyze_hlo(txt)
+    rec["analyze_s"] = round(time.time() - t0, 1)
+    rec["hlo_chars"] = len(txt)
+    rec["per_device"] = costs.to_json()
+
+    # ---- roofline terms (seconds; per the assignment formulas) ------------
+    compute_term = costs.dot_flops / PEAK_FLOPS
+    memory_term = costs.op_bytes / HBM_BW
+    collective_term = costs.total_collective_bytes / LINK_BW
+    terms = {
+        "compute_s": compute_term,
+        "memory_s": memory_term,
+        "collective_s": collective_term,
+    }
+    rec["roofline"] = terms
+    rec["dominant"] = max(terms, key=terms.get)
+
+    lm, shape = built["lm"], built["shape"]
+    total, active = active_params(lm)
+    if shape.kind == "train":
+        model_flops = 6.0 * active * shape.global_batch * shape.seq_len
+    elif shape.kind == "prefill":
+        model_flops = 2.0 * active * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2.0 * active * shape.global_batch
+    rec["params_total"] = total
+    rec["params_active"] = active
+    rec["model_flops"] = model_flops
+    hlo_global = costs.dot_flops * chips
+    rec["useful_flops_ratio"] = model_flops / hlo_global if hlo_global else 0.0
+    ideal = model_flops / (chips * PEAK_FLOPS)
+    bound = max(terms.values())
+    rec["roofline_fraction"] = ideal / bound if bound else 0.0
+    rec["wall_s"] = round(time.time() - t_start, 1)
+    rec["ok"] = True
+    return rec
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--out", default=None)
+    p.add_argument("--remat", default="full")
+    p.add_argument("--grad-accum", type=int, default=0)
+    p.add_argument("--moment-dtype", default=None)
+    p.add_argument("--param-dtype", default=None,
+                   help="serving override: lower with bf16 weights")
+    p.add_argument("--no-fsdp", action="store_true",
+                   help="serving override: replicate weights over data axes")
+    p.add_argument("--serve-period-cache", action="store_true",
+                   help="decode: period-scan with per-kind cache lengths")
+    p.add_argument("--cast-params", action="store_true",
+                   help="L1: bf16 working copy before layer use")
+    p.add_argument("--shard-cache-seq", action="store_true",
+                   help="L4: shard decode cache length over the model axis")
+    p.add_argument("--tag", default="baseline")
+    args = p.parse_args(argv)
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod, args)
+    except Exception as e:  # record failures — they are findings, not crashes
+        rec = {
+            "arch": args.arch,
+            "shape": args.shape,
+            "mesh": "2x16x16" if args.multi_pod else "16x16",
+            "ok": False,
+            "error": f"{type(e).__name__}: {e}",
+        }
+        print(json.dumps(rec), file=sys.stderr)
+    rec["tag"] = args.tag
+    line = json.dumps(rec)
+    print(line)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "a") as f:
+            f.write(line + "\n")
+    return 0 if rec.get("ok") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

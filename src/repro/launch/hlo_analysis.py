@@ -1,0 +1,318 @@
+"""Trip-count-aware analysis of compiled (post-SPMD) HLO text.
+
+``jax``'s ``compiled.cost_analysis()`` visits every computation **once**: a
+``lax.scan`` over 60 layers or a gradient-accumulation loop contributes a
+single body's FLOPs (verified on this backend: smollm-360m's train step
+reports 9.3e10 vs 2.28e15 analytic 6ND — the gap is exactly the
+layer-scan × grad-accum × attention-chunk trip counts).  Roofline terms
+need *executed* counts, so this module parses the compiled module text,
+reads each ``while``'s ``known_trip_count`` backend annotation (falling
+back to the constant in its condition computation), and multiplies costs
+down the call graph.
+
+Per-device quantities (the module is the SPMD-partitioned per-device
+program):
+
+* ``dot_flops``         2 · |result| · |contraction| per dot, × trips
+* ``dot_bytes``         operand + result bytes of dots
+* ``op_bytes``          HBM-traffic proxy: result bytes of top-level ops +
+                        operand/result bytes at fusion boundaries (bodies of
+                        fusions execute in registers/VMEM and are excluded,
+                        matching XLA's own bytes-accessed semantics)
+* ``collective_bytes``  per collective opcode, × trips
+* ``by_opcode``         op_bytes broken down by opcode (diagnosis aid)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HloCosts", "analyze_hlo", "COLLECTIVE_OPS"]
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[\\"]*:\{[\\"]*n[\\"]*:[\\"]*(\d+)')
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*([a-z0-9]+)\[([\d,]*)\]")
+_NAME_EQ_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _parse_shapes(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_op(rest: str) -> tuple[str, str, str] | None:
+    """Split ``'TYPE opcode(args...'`` → (type_str, opcode, args).
+
+    Handles tuple types with nested parens and ``/*index=N*/`` comments.
+    """
+    rest = rest.lstrip()
+    if rest.startswith("("):
+        depth = 0
+        type_str = None
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_str = rest[: i + 1]
+                    tail = rest[i + 1 :].lstrip()
+                    break
+        if type_str is None:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, tail = rest[:sp], rest[sp + 1 :].lstrip()
+    m = re.match(r"([\w\-]+)\(", tail)
+    if not m:
+        return None
+    return type_str, m.group(1), tail[m.end() :]
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    op_bytes: float = 0.0
+    collectives: dict[str, float] = dataclasses.field(default_factory=dict)
+    children: list[tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_const: int = 0
+    by_opcode: dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class HloCosts:
+    """Executed, per-device costs of a compiled module."""
+
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    op_bytes: float = 0.0
+    collective_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
+    by_opcode: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def add(self, other: "HloCosts", mult: float = 1.0) -> None:
+        self.dot_flops += other.dot_flops * mult
+        self.dot_bytes += other.dot_bytes * mult
+        self.op_bytes += other.op_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v * mult
+        for k, v in other.by_opcode.items():
+            self.by_opcode[k] = self.by_opcode.get(k, 0.0) + v * mult
+
+    def to_json(self) -> dict:
+        return {
+            "dot_flops": self.dot_flops,
+            "dot_bytes": self.dot_bytes,
+            "op_bytes": self.op_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+        }
+
+
+_CONTROL_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call",
+}
+
+
+def _parse(text: str) -> tuple[dict[str, _Comp], str]:
+    comps: dict[str, _Comp] = {}
+    entry = ""
+    cur: _Comp | None = None
+    symbols: dict[str, tuple[str, list[int]]] = {}
+
+    for line in text.splitlines():
+        # --- computation header (column 0, "name (params) -> type {") ------
+        if line[:1] not in (" ", "\t") and "{" in line and "->" in line:
+            stripped = line.strip()
+            name_m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", stripped)
+            if name_m:
+                cur = _Comp(name_m.group(1))
+                comps[cur.name] = cur
+                symbols = {}
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                for pm in _PARAM_RE.finditer(stripped):
+                    dims = (
+                        [int(d) for d in pm.group(3).split(",")]
+                        if pm.group(3)
+                        else []
+                    )
+                    symbols[pm.group(1)] = (pm.group(2), dims)
+                continue
+        if cur is None:
+            continue
+        for cm in _CONST_RE.finditer(line):
+            cur.max_const = max(cur.max_const, int(cm.group(1)))
+        nm = _NAME_EQ_RE.match(line)
+        if not nm:
+            continue
+        opname = nm.group(1)
+        split = _split_op(line[nm.end():])
+        if split is None:
+            continue
+        type_str, opcode, args = split
+        shapes = _parse_shapes(type_str)
+        if len(shapes) == 1:
+            symbols[opname] = shapes[0]
+
+        if opcode == "while":
+            wm = _WHILE_RE.search(args)
+            tm = _TRIP_RE.search(args)
+            if wm:
+                trips = int(tm.group(1)) if tm else -1
+                cur.children.append((f"while:{trips}:{wm.group(1)}", wm.group(2)))
+            continue
+        # fusions execute their body in registers/VMEM: traverse for dot
+        # FLOPs/collectives, but count HBM bytes only at the fusion boundary
+        # (operands + result) — matching XLA's own bytes-accessed semantics.
+        child_kind = "fusion" if opcode == "fusion" else "call"
+        for cm2 in _CALLS_RE.finditer(args):
+            cur.children.append((child_kind, cm2.group(1)))
+        if opcode == "conditional":
+            bm = _BRANCHES_RE.search(args)
+            if bm:
+                for b in bm.group(1).split(","):
+                    cur.children.append(("branch", b.strip().lstrip("%")))
+
+        if opcode == "dot":
+            rbytes = _shape_bytes(type_str)
+            relems = 0
+            if shapes and shapes[0][0] in _DTYPE_BYTES:
+                relems = 1
+                for d in shapes[0][1]:
+                    relems *= d
+            operands = _OPERAND_RE.findall(args)
+            lhs_shape = symbols.get(operands[0], (None, []))[1] if operands else []
+            k = 1
+            cd = _DOT_DIMS_RE.search(args)
+            if cd and cd.group(1):
+                for d in cd.group(1).split(","):
+                    di = int(d)
+                    k *= lhs_shape[di] if di < len(lhs_shape) else 1
+            cur.dot_flops += 2.0 * relems * k
+            opbytes = 0
+            for o in operands[:2]:
+                dt, dims = symbols.get(o, (None, []))
+                if dt in _DTYPE_BYTES:
+                    n = 1
+                    for dd in dims:
+                        n *= dd
+                    opbytes += n * _DTYPE_BYTES[dt]
+            cur.dot_bytes += rbytes + opbytes
+        elif opcode in COLLECTIVE_OPS:
+            if opcode == "all-gather":
+                b = _shape_bytes(type_str)
+            else:
+                operands = _OPERAND_RE.findall(args)
+                dt, dims = (
+                    symbols.get(operands[0], (None, [])) if operands else (None, [])
+                )
+                if dt in _DTYPE_BYTES:
+                    n = 1
+                    for dd in dims:
+                        n *= dd
+                    b = n * _DTYPE_BYTES[dt]
+                else:
+                    b = _shape_bytes(type_str)
+            cur.collectives[opcode] = cur.collectives.get(opcode, 0.0) + b
+        if opcode == "fusion":
+            site = _shape_bytes(type_str)
+            for o in _OPERAND_RE.findall(args.split("), ")[0]):
+                dt, dims = symbols.get(o, (None, []))
+                if dt in _DTYPE_BYTES:
+                    n = 1
+                    for dd in dims:
+                        n *= dd
+                    site += n * _DTYPE_BYTES[dt]
+            cur.op_bytes += site
+            cur.by_opcode["fusion"] = cur.by_opcode.get("fusion", 0.0) + site
+        elif opcode not in _CONTROL_OPS:
+            b = _shape_bytes(type_str)
+            cur.op_bytes += b
+            cur.by_opcode[opcode] = cur.by_opcode.get(opcode, 0.0) + b
+    return comps, entry
+
+
+def analyze_hlo(text: str) -> HloCosts:
+    comps, entry = _parse(text)
+    memo: dict[str, HloCosts] = {}
+
+    def total(name: str, stack: frozenset[str]) -> HloCosts:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        out = HloCosts()
+        if c is None or name in stack:
+            return out
+        out.dot_flops = c.dot_flops
+        out.dot_bytes = c.dot_bytes
+        out.op_bytes = c.op_bytes
+        out.collective_bytes = dict(c.collectives)
+        out.by_opcode = dict(c.by_opcode)
+        stack2 = stack | {name}
+        branches: list[HloCosts] = []
+        for kind, child in c.children:
+            sub = total(child, stack2)
+            if kind == "branch":
+                branches.append(sub)
+                continue
+            mult = 1.0
+            if kind.startswith("while:"):
+                _, trips_s, cond = kind.split(":", 2)
+                trips = int(trips_s)
+                if trips < 0:
+                    trips = comps[cond].max_const if cond in comps else 1
+                mult = max(trips, 1)
+            if kind == "fusion":
+                sub = dataclasses.replace(sub, op_bytes=0.0, by_opcode={})
+            out.add(sub, mult)
+        if branches:
+            out.add(max(branches, key=lambda h: h.dot_flops + h.op_bytes))
+        memo[name] = out
+        return out
+
+    return total(entry, frozenset())

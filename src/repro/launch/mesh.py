@@ -1,0 +1,34 @@
+"""Mesh construction for the production topology and test configurations.
+
+``make_production_mesh`` builds the assignment's target: one TPU v5e pod of
+16×16 = 256 chips (axes ``data × model``), or two pods = 512 chips with a
+leading ``pod`` axis.  Defined as functions so importing this module never
+touches jax device state (device count is locked at first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_from_string", "parse_mesh_string"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def parse_mesh_string(s: str) -> tuple[tuple[str, ...], tuple[int, ...]]:
+    """'data=4,model=2' → (('data','model'), (4,2))."""
+    names, sizes = [], []
+    for part in s.split(","):
+        k, v = part.split("=")
+        names.append(k.strip())
+        sizes.append(int(v))
+    return tuple(names), tuple(sizes)
+
+
+def make_mesh_from_string(s: str) -> jax.sharding.Mesh:
+    names, sizes = parse_mesh_string(s)
+    return jax.make_mesh(sizes, names)

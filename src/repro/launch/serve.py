@@ -1,0 +1,120 @@
+"""Serving launcher: load a checkpoint (any Source layout) and decode.
+
+Demonstrates the weights-only UCP Load path: serving needs ``fp32`` atoms
+(cast to the serving dtype) and skips the optimizer moments entirely —
+one third of the checkpoint bytes.
+
+::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
+        --ckpt-dir /tmp/run1 --batch 4 --prompt-len 16 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--reduced", action="store_true")
+    p.add_argument("--host-devices", type=int, default=0)
+    p.add_argument("--mesh", default="data=1,model=1")
+    p.add_argument("--ckpt-dir", default=None, help="resume weights from here")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--gen", type=int, default=32)
+    p.add_argument("--cache-len", type=int, default=0)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ParallelismConfig, get_config, reduced
+    from repro.core.layout import MeshSpec
+    from repro.dist.sharding import make_plan, make_sharder, vocab_multiple
+    from repro.launch.mesh import make_mesh_from_string
+    from repro.models import build_model
+    from repro.models import decode as D
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    jmesh = make_mesh_from_string(args.mesh)
+    mspec = MeshSpec.from_mesh(jmesh)
+    parallel = ParallelismConfig(
+        data_axes=tuple(a for a in ("pod", "data") if mspec.has_axis(a)) or ("data",),
+    )
+    lm = build_model(
+        cfg,
+        vocab_multiple=vocab_multiple(parallel, mspec),
+        remat="none",
+        shard=make_sharder(parallel, jmesh),
+    )
+
+    if args.ckpt_dir:
+        # weights-only restore: read just the fp32 atoms / shards
+        from repro.ckpt.manager import CheckpointManager
+
+        plan = make_plan(cfg, lm.registry, parallel, mspec)
+        mgr = CheckpointManager(args.ckpt_dir, plan, async_save=False)
+        res = mgr.restore(jmesh)
+        if res is None:
+            print("no checkpoint found; serving from random init")
+            params = lm.init(jax.random.PRNGKey(args.seed))
+        else:
+            state, info = res
+            params = state.params
+            print(f"restored step {info.step} via {info.mode.value} "
+                  f"in {info.wall_time_s:.2f}s")
+    else:
+        params = lm.init(jax.random.PRNGKey(args.seed))
+
+    b = args.batch
+    cache_len = args.cache_len or (args.prompt_len + args.gen)
+    cache = D.init_cache(lm, b, cache_len)
+    key = jax.random.PRNGKey(args.seed)
+    toks = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab_size)
+    extra = {}
+    if cfg.cross_attn is not None:
+        extra["source_embeds"] = jax.random.normal(
+            key, (b, cfg.cross_attn.source_len, cfg.cross_attn.source_dim),
+            jnp.bfloat16)
+    if cfg.encoder is not None:
+        extra["source_embeds"] = jax.random.normal(
+            key, (b, cfg.encoder.source_len, cfg.d_model), jnp.bfloat16)
+
+    with jmesh:
+        t0 = time.perf_counter()
+        logits, cache = D.prefill(lm, params, cache, toks, **extra)
+        prefill_s = time.perf_counter() - t0
+        step = jax.jit(lambda pp, cc, tt: D.decode_step(lm, pp, cc, tt))
+        cur = jnp.argmax(logits, -1)[:, None]
+        outs = [cur]
+        t0 = time.perf_counter()
+        for _ in range(args.gen - 1):
+            lg, cache = step(params, cache, cur)
+            cur = jnp.argmax(lg[:, -1], -1)[:, None]
+            outs.append(cur)
+        jax.block_until_ready(cur)
+        gen_s = time.perf_counter() - t0
+    seq = jnp.concatenate(outs, 1)
+    print(f"prefill {args.prompt_len} toks × {b} reqs: {prefill_s*1e3:.0f} ms")
+    print(f"decode  {args.gen - 1} steps × {b} reqs: {gen_s*1e3:.0f} ms "
+          f"({b*(args.gen-1)/max(gen_s,1e-9):.0f} tok/s)")
+    print("sample:", seq[0, :16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,146 @@
+"""Training launcher CLI.
+
+Examples::
+
+    # fresh run on a 2x2 host-device mesh (CPU simulation)
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+        --host-devices 4 --mesh data=2,model=2 --steps 20 --batch 8 --seq 64 \
+        --ckpt-dir /tmp/run1
+
+    # elastic resume of the same run on a DIFFERENT mesh/parallelism —
+    # the trainer detects the layout change and goes through UCP atoms
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --reduced \
+        --host-devices 8 --mesh data=8,model=1 --steps 20 --batch 8 --seq 64 \
+        --ckpt-dir /tmp/run1
+
+``--host-devices`` must be applied before jax initializes, hence the
+environment mutation at the very top of ``main`` and all deferred imports.
+``--log-json`` emits one JSON object per step on stdout (consumed by the
+e2e reconfiguration tests and the correctness benchmark).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(description="repro trainer")
+    p.add_argument("--arch", required=True)
+    p.add_argument("--reduced", action="store_true", help="tiny same-family config")
+    p.add_argument("--host-devices", type=int, default=0,
+                   help="simulate N CPU devices (sets XLA_FLAGS; must be set "
+                        "before jax init)")
+    p.add_argument("--mesh", default="data=1,model=1")
+    p.add_argument("--steps", type=int, default=20)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--save-interval", type=int, default=10)
+    p.add_argument("--keep-last", type=int, default=10)
+    p.add_argument("--sync-save", action="store_true")
+    p.add_argument("--zero", type=int, default=3, choices=(1, 2, 3))
+    p.add_argument("--no-fsdp", action="store_true")
+    p.add_argument("--no-tp", action="store_true")
+    p.add_argument("--no-sp", action="store_true")
+    p.add_argument("--no-ep", action="store_true")
+    p.add_argument("--pipe-axis", default=None)
+    p.add_argument("--grad-accum", type=int, default=1)
+    p.add_argument("--remat", default="full", choices=("none", "full", "dots"))
+    p.add_argument("--moment-dtype", default="float32")
+    p.add_argument("--lr", type=float, default=3e-4)
+    p.add_argument("--warmup", type=int, default=10)
+    p.add_argument("--total-steps", type=int, default=200)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--log-json", action="store_true")
+    return p
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.host_devices:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices} " + flags
+        )
+
+    # jax-dependent imports only after XLA_FLAGS is final
+    from repro.configs import ParallelismConfig, TrainConfig, get_config, reduced
+    from repro.launch.mesh import make_mesh_from_string
+    from repro.train.trainer import Trainer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+
+    jmesh = make_mesh_from_string(args.mesh)
+    names = jmesh.axis_names
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    parallel = ParallelismConfig(
+        data_axes=data_axes or ("data",),
+        model_axis="model",
+        pipe_axis=args.pipe_axis if (args.pipe_axis in names if args.pipe_axis else False) else ("pipe" if "pipe" in names else None),
+        fsdp=not args.no_fsdp,
+        zero=args.zero,
+        tensor_parallel=not args.no_tp,
+        expert_parallel=not args.no_ep,
+        sequence_parallel=not args.no_sp,
+        moment_dtype=args.moment_dtype,
+        remat=args.remat,
+        grad_accum=args.grad_accum,
+    )
+    tcfg = TrainConfig(
+        learning_rate=args.lr,
+        warmup_steps=args.warmup,
+        total_steps=args.total_steps,
+        seed=args.seed,
+    )
+
+    trainer = Trainer.create(
+        cfg, parallel, tcfg, jmesh,
+        batch_size=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        keep_last=args.keep_last,
+        save_interval=args.save_interval,
+        async_save=not args.sync_save,
+    )
+    state, info = trainer.init_or_restore()
+    start = int(jax.device_get(state.step)) if (jax := __import__("jax")) else 0
+    if info is not None:
+        print(
+            json.dumps(
+                {
+                    "event": "restored",
+                    "step": info.step,
+                    "mode": info.mode.value,
+                    "reason": info.reason,
+                    "load_s": round(info.wall_time_s, 3),
+                }
+            ),
+            flush=True,
+        )
+
+    def log(rec):
+        if args.log_json:
+            print(json.dumps({"event": "step", **rec}), flush=True)
+        else:
+            print(
+                f"step {rec['step']:5d} loss {rec['loss']:.4f} "
+                f"gnorm {rec['grad_norm']:.3f} ({rec['dt']*1e3:.0f} ms)",
+                flush=True,
+            )
+
+    remaining = args.steps - start
+    if remaining > 0:
+        state, _ = trainer.run(state, start, remaining, log=log)
+    if trainer.manager is not None:
+        trainer.manager.close()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,5 @@
+from .api import build_model, cache_specs, input_specs
+from .lm import LM, build_lm
+from . import decode
+
+__all__ = ["build_model", "cache_specs", "input_specs", "LM", "build_lm", "decode"]

@@ -1,0 +1,61 @@
+"""Public model API: build models and describe their inputs per shape.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input of a given (arch × shape) cell — weak-type-correct, shardable, no
+device allocation — which is what the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from .lm import LM, build_lm
+from . import decode as decode_lib
+
+__all__ = ["build_model", "input_specs", "cache_specs", "LM"]
+
+
+def build_model(cfg: ModelConfig, **kw) -> LM:
+    return build_lm(cfg, **kw)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStructs for the batch of one (arch × shape) cell.
+
+    * train   — ``tokens [B, S+1]`` (shift happens inside the loss)
+    * prefill — ``tokens [B, S]``
+    * decode  — ``tokens [B, 1]`` (the cache carries the S-token history)
+
+    ``[audio]``/``[vlm]`` archs additionally get stubbed frontend
+    embeddings (precomputed frames / patches), per the assignment.
+    """
+    b = shape.global_batch
+    specs: dict = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, shape.seq_len + 1), jnp.int32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+
+    if shape.kind != "decode":
+        if cfg.cross_attn is not None:
+            specs["source_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.cross_attn.source_len, cfg.cross_attn.source_dim),
+                jnp.bfloat16,
+            )
+        if cfg.encoder is not None:
+            specs["source_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder.source_len, cfg.d_model), jnp.bfloat16
+            )
+    return specs
+
+
+def cache_specs(lm: LM, batch: int, cache_len: int) -> dict:
+    """Abstract (ShapeDtypeStruct) version of the decode cache."""
+    cache = jax.eval_shape(
+        lambda: decode_lib.init_cache(lm, batch, cache_len)
+    )
+    return cache

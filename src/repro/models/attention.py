@@ -1,0 +1,191 @@
+"""Attention: GQA / sliding-window / cross / MLA, train+prefill+decode.
+
+Two interchangeable self-attention implementations:
+
+* :func:`full_attention` — naive O(S²)-memory oracle, used for tests and
+  short sequences;
+* :func:`chunked_attention` — double-scan online-softmax ("flash-style")
+  pure-jnp implementation with O(block²) live memory, used by train/prefill
+  at scale and as the lowering used in the CPU dry-run.  The Pallas kernel
+  in ``repro.kernels.flash_attention`` is the TPU-target version of the
+  same math and is validated against these references.
+
+Sliding windows are *dynamic*: the window size is a traced scalar (0 = full
+attention), which lets a layer-stacked ``lax.scan`` carry per-layer window
+metadata (Gemma-3's 5:1 local:global schedule) through a single traced body.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "full_attention",
+    "chunked_attention",
+    "decode_attention",
+    "repeat_kv",
+]
+
+_NEG_INF = -2.0e38  # large finite negative: avoids NaN from all-masked rows
+
+
+def _allowed(
+    q_pos: jax.Array, kv_pos: jax.Array, window, *, causal: bool
+) -> jax.Array:
+    """Mask of shape [..., Sq, Skv]: True where attention is permitted."""
+    d = q_pos[..., :, None] - kv_pos[..., None, :]
+    ok = (d >= 0) if causal else jnp.ones(d.shape, bool)
+    window = jnp.asarray(window)
+    win_ok = jnp.where(window > 0, d < window, True)
+    return ok & win_ok
+
+
+def repeat_kv(kv: jax.Array, groups: int) -> jax.Array:
+    """[B, S, Hkv, D] → [B, S, Hkv*groups, D] (GQA head sharing)."""
+    if groups == 1:
+        return kv
+    b, s, h, d = kv.shape
+    return jnp.broadcast_to(kv[:, :, :, None, :], (b, s, h, groups, d)).reshape(
+        b, s, h * groups, d
+    )
+
+
+def full_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=0,
+    q_offset=0,
+    kv_positions: jax.Array | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive reference. q: [B,Sq,H,D]; k,v: [B,Skv,Hkv,Dv]."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    k = repeat_kv(k, h // hkv)
+    v = repeat_kv(v, h // hkv)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(sq)
+    kv_pos = kv_positions if kv_positions is not None else jnp.arange(skv)
+    mask = _allowed(q_pos, kv_pos, window, causal=causal)
+    scores = jnp.where(mask[None, None], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=0,
+    q_offset=0,
+    scale: float | None = None,
+    q_block: int = 512,
+    kv_block: int = 1024,
+) -> jax.Array:
+    """Online-softmax attention with O(q_block·kv_block) live score memory.
+
+    Equivalent to :func:`full_attention` (validated in tests); this is the
+    form whose compiled HLO stays within HBM at 32k–500k sequence lengths.
+    """
+    b, sq, h, d = q.shape
+    skv, hkv, dv = k.shape[1], k.shape[2], v.shape[3]
+    groups = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    if sq % q_block or skv % kv_block:
+        raise ValueError(f"seq lens ({sq},{skv}) not divisible by blocks")
+    nq, nk = sq // q_block, skv // kv_block
+
+    k = repeat_kv(k, groups)
+    v = repeat_kv(v, groups)
+    # Fold the softmax scale into q once (removes a [qb,kb]-sized multiply
+    # from every block pair — §Perf L2).
+    q = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qs = q.reshape(b, nq, q_block, h, d).transpose(1, 0, 3, 2, 4)  # [nq,B,H,qb,d]
+    ks = k.reshape(b, nk, kv_block, h, d).transpose(1, 0, 3, 2, 4)
+    vs = v.reshape(b, nk, kv_block, h, dv).transpose(1, 0, 3, 2, 4)
+
+    window = jnp.asarray(window)
+
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc  # qc: [B,H,qb,d]
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kj_kc):
+            m, l, acc = carry
+            kj, kc, vc = kj_kc
+            kv_pos = kj * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qc, kc).astype(jnp.float32)
+            mask = _allowed(q_pos, kv_pos, window, causal=causal)
+            s = jnp.where(mask[None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(vc.dtype), vc
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_block), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        a0 = jnp.zeros((b, h, q_block, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    # outs: [nq, B, H, qb, dv] → [B, Sq, H, dv]
+    return outs.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, dv)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    cache_positions: jax.Array,
+    cur_pos: jax.Array,
+    window=0,
+    scale: float | None = None,
+) -> jax.Array:
+    """One-token decode against a (possibly ring-buffered) KV cache.
+
+    q: [B,1,H,D]; caches: [B,C,Hkv,D]; ``cache_positions``: [B,C] absolute
+    token position held in each cache slot (-1 = empty); ``cur_pos``: [B]
+    position of the query token.  Ring buffers (sliding-window layers keep
+    only ``window`` slots) work because masking is by *position*, not slot.
+
+    GQA is handled *group-wise* — the query is reshaped, never the cache.
+    A ``repeat_kv`` broadcast+reshape on a sequence-sharded cache makes XLA
+    all-gather the entire cache per layer ("involuntary full
+    rematerialization"); keeping the cache untouched lets every einsum
+    contract shard-locally, with only tiny [B,H,1]-sized softmax
+    reductions crossing the model axis (§Perf It-S4).
+    """
+    b, _, h, d = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = (q.reshape(b, hkv, g, d).astype(jnp.float32) * scale).astype(q.dtype)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg, k_cache).astype(jnp.float32)
+    dpos = cur_pos[:, None] - cache_positions  # [B,C]
+    window = jnp.asarray(window)
+    ok = (cache_positions >= 0) & (dpos >= 0)
+    ok &= jnp.where(window > 0, dpos < window, True)
+    s = jnp.where(ok[:, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bkgc,bckd->bkgd", p, v_cache)
+    return o.reshape(b, 1, h, d)

@@ -1,0 +1,181 @@
+"""Shared model substrate: parameter registry, norms, rotary, MLPs.
+
+Models declare their parameters as :class:`ParamDef` tables with *logical
+axis names* per dimension (``embed``, ``heads``, ``vocab``, ``expert``, ...).
+The distribution layer (``repro.dist.sharding``) maps logical axes to mesh
+axes, producing in one pass:
+
+* the runtime ``PartitionSpec`` for every parameter,
+* the UCP :class:`~repro.core.patterns.ParamSpec` (pattern + per-state
+  layout) for every parameter — the single-source-of-truth property that
+  makes checkpoints and runtime layouts impossible to drift apart.
+
+Fused dimensions (packed QKV, packed Mamba in-projection) carry named
+sub-parts — the paper's Fig.-5 sub-patterns — so tensor-parallel sharding
+splits each part independently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pytree import unflatten_from_paths
+
+__all__ = [
+    "ParamDef",
+    "ParamRegistry",
+    "rms_norm",
+    "rotary_embedding",
+    "apply_rope",
+    "swiglu",
+    "gelu_mlp",
+    "cast_tree",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declaration of one (possibly layer-stacked) parameter tensor.
+
+    ``shape``      logical shape (stacked scan dim first when ``stacked``)
+    ``axes``       logical axis name per dim; the sharding rule table maps
+                   these to mesh axes.  Conventional names:
+                   layers | embed | vocab | heads | kv_heads | qkv_fused |
+                   mlp | expert | expert_mlp | ssm_inner | ssm_state |
+                   ssm_heads | conv | lora | scalar
+    ``parts``      named sub-fragment sizes along ``parts_dim`` (fused dims)
+    ``init``       normal | zeros | ones | ssm_dt | ssm_alog
+    ``fan_in_dim`` dimension whose size scales normal init (1/sqrt(fan_in))
+    """
+
+    path: str
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    init: str = "normal"
+    fan_in_dim: int | None = None
+    parts: tuple[tuple[str, int], ...] | None = None
+    parts_dim: int | None = None
+    kind: str = "dense"
+    stacked: bool = False
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"{self.path}: shape/axes rank mismatch")
+        if self.parts is not None:
+            if self.parts_dim is None:
+                raise ValueError(f"{self.path}: parts without parts_dim")
+            total = sum(s for _, s in self.parts)
+            if total != self.shape[self.parts_dim]:
+                raise ValueError(
+                    f"{self.path}: parts sum {total} != dim {self.shape[self.parts_dim]}"
+                )
+
+    @property
+    def stacked_dim(self) -> int | None:
+        return 0 if self.stacked else None
+
+
+class ParamRegistry:
+    """Ordered collection of ParamDefs with initialization."""
+
+    def __init__(self, defs: Sequence[ParamDef]):
+        self.defs: dict[str, ParamDef] = {}
+        for d in defs:
+            if d.path in self.defs:
+                raise ValueError(f"duplicate param {d.path}")
+            self.defs[d.path] = d
+
+    def __iter__(self):
+        return iter(self.defs.values())
+
+    def __getitem__(self, path: str) -> ParamDef:
+        return self.defs[path]
+
+    def num_params(self) -> int:
+        return sum(math.prod(d.shape) for d in self.defs.values())
+
+    def init(self, key: jax.Array, dtype=jnp.float32) -> dict:
+        leaves = {}
+        keys = jax.random.split(key, len(self.defs))
+        for k, d in zip(keys, self.defs.values()):
+            leaves[d.path] = _init_leaf(k, d, dtype)
+        return unflatten_from_paths(leaves)
+
+    def abstract(self, dtype=jnp.float32) -> dict:
+        return unflatten_from_paths(
+            {d.path: jax.ShapeDtypeStruct(d.shape, dtype) for d in self.defs.values()}
+        )
+
+
+def _init_leaf(key: jax.Array, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "ssm_dt":
+        # dt bias such that softplus(dt) spans ~[1e-3, 1e-1] (Mamba init)
+        u = jax.random.uniform(key, d.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)  # inv softplus
+    if d.init == "ssm_alog":
+        n = d.shape[-1]
+        a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), d.shape)
+        return jnp.log(a).astype(dtype)
+    fan_in = d.shape[d.fan_in_dim] if d.fan_in_dim is not None else d.shape[-1]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# NN building blocks (pure functions, dtype-polymorphic)
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def rotary_embedding(
+    positions: jax.Array, head_dim: int, theta: float
+) -> tuple[jax.Array, jax.Array]:
+    """Return (sin, cos) of shape [..., head_dim/2] for given positions."""
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; sin/cos: [..., seq, head_dim/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :].astype(x.dtype)
+    c = cos[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down.astype(x.dtype))
+
+
+def gelu_mlp(x, w1, w2):
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w1.astype(x.dtype)))
+    return jnp.einsum("...f,fd->...d", h, w2.astype(x.dtype))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree
+    )

@@ -1,0 +1,365 @@
+"""Serving path: cache construction, prefill, and single-token decode.
+
+Cache design (per stage, per body position):
+
+* GQA attention — ring-buffered K/V ``[count, B, C, Hkv, hd]`` where
+  ``C = min(window, cache_len)`` for static sliding-window layers (Mixtral's
+  4096-slot ring) and ``cache_len`` for full-attention / scanned-window
+  layers.  Masking is positional (each slot remembers its absolute token
+  position) so ring overwrite needs no special cases.
+* MLA (DeepSeek) — the *compressed latent* cache ``c_kv [.., kv_lora]`` and
+  the shared roped key ``k_rope [.., rope_dim]``; decode uses the absorbed
+  formulation (no per-head K/V ever materialized).
+* Mamba — constant-size ``(ssm_state [.., H, P, N] fp32, conv window
+  [.., K-1, conv_dim])``; this is why SSM/hybrid archs run the 500k shape.
+* Cross-attention — K/V over the (stub) modality source, computed once at
+  prefill.
+
+``decode_step`` is the ``serve_step`` the decode_* dry-run shapes lower.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import decode_attention, full_attention
+from .common import apply_rope, rms_norm, rotary_embedding
+from .lm import LM, LayerDef, StageDef
+from .ssm import conv_decode_step, ssm_decode_step
+
+__all__ = ["init_cache", "prefill", "decode_step"]
+
+
+def _cache_len_for(lm: LM, ld: LayerDef, cache_len: int) -> int:
+    if ld.kind == "attn" and ld.window > 0:
+        return min(ld.window, cache_len)
+    return cache_len
+
+
+def init_cache(lm: LM, batch: int, cache_len: int) -> dict:
+    cfg = lm.cfg
+    dt = lm.compute_dtype
+    hd = cfg.resolved_head_dim
+    hkv = cfg.num_kv_heads
+    cache: dict = {"pos": jnp.zeros((batch,), jnp.int32)}
+    for stage in lm.stages:
+        st: dict = {}
+        for ld in stage.body:
+            c = _cache_len_for(lm, ld, cache_len)
+            n = stage.count
+            entry: dict = {}
+            if ld.kind == "mamba":
+                s = cfg.ssm
+                di = s.d_inner(cfg.d_model)
+                entry["h"] = jnp.zeros(
+                    (n, batch, s.n_heads(cfg.d_model), s.head_dim, s.d_state),
+                    jnp.float32,
+                )
+                entry["conv"] = jnp.zeros(
+                    (n, batch, s.d_conv - 1, di + 2 * s.n_groups * s.d_state), dt
+                )
+            elif ld.kind == "cross":
+                src = cfg.cross_attn.source_len
+                entry["ck"] = jnp.zeros((n, batch, src, hkv, hd), dt)
+                entry["cv"] = jnp.zeros((n, batch, src, hkv, hd), dt)
+            else:
+                if cfg.mla is not None:
+                    m = cfg.mla
+                    entry["c_kv"] = jnp.zeros((n, batch, c, m.kv_lora_rank), dt)
+                    entry["k_rope"] = jnp.zeros(
+                        (n, batch, c, m.qk_rope_head_dim), dt
+                    )
+                else:
+                    entry["k"] = jnp.zeros((n, batch, c, hkv, hd), dt)
+                    entry["v"] = jnp.zeros((n, batch, c, hkv, hd), dt)
+                entry["slot_pos"] = jnp.full((n, batch, c), -1, jnp.int32)
+                if ld.with_cross:
+                    src = cfg.encoder.source_len
+                    entry["ck"] = jnp.zeros((n, batch, src, hkv, hd), dt)
+                    entry["cv"] = jnp.zeros((n, batch, src, hkv, hd), dt)
+            st[ld.name] = entry
+        cache[stage.name] = st
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode-time layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _write_ring(cache_arr, new, pos):
+    """cache_arr [B,C,...]; new [B,...]; pos [B] → write at slot pos%C.
+
+    Static-batched serving fills all requests in lockstep, so the slot is
+    taken from ``pos[0]`` and the write lowers to a dynamic-update-slice —
+    which SPMD executes shard-locally even when the cache's slot dimension
+    is sharded (a batched scatter would make XLA gather the whole cache;
+    §Perf It-S3)."""
+    c = cache_arr.shape[1]
+    slot = pos[0] % c
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache_arr, new[:, None].astype(cache_arr.dtype), slot, axis=1
+    )
+
+
+def _attn_decode(lm: LM, ld: LayerDef, p, entry, x, pos, window):
+    cfg = lm.cfg
+    b = x.shape[0]
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    new = dict(entry)
+    if cfg.mla is not None:
+        out, new = _mla_decode(lm, p, entry, h, pos)
+    else:
+        hd = cfg.resolved_head_dim
+        hq, hkv = cfg.num_heads, cfg.num_kv_heads
+        qkv = jnp.einsum("bsd,df->bsf", h, p["wqkv"].astype(h.dtype))
+        q, k, v = jnp.split(qkv, [hq * hd, (hq + hkv) * hd], axis=-1)
+        q = q.reshape(b, 1, hq, hd)
+        k = k.reshape(b, 1, hkv, hd)
+        v = v.reshape(b, 1, hkv, hd)
+        sin, cos = rotary_embedding(pos[:, None], hd, cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+        new["k"] = _write_ring(entry["k"], k[:, 0], pos)
+        new["v"] = _write_ring(entry["v"], v[:, 0], pos)
+        new["slot_pos"] = _write_ring(entry["slot_pos"], pos, pos)
+        o = decode_attention(
+            q, new["k"], new["v"],
+            cache_positions=new["slot_pos"], cur_pos=pos, window=window,
+        )
+        out = jnp.einsum(
+            "bsf,fd->bsd", o.reshape(b, 1, hq * hd), p["wo"].astype(h.dtype)
+        )
+    x = x + out
+    if ld.with_cross:
+        x, _ = _cross_decode(lm, p, entry, x, gated=False)
+    return x, new
+
+
+def _mla_decode(lm: LM, p, entry, h, pos):
+    """Absorbed MLA decode: attention in the compressed latent space."""
+    cfg, m = lm.cfg, lm.cfg.mla
+    b = h.shape[0]
+    hq = cfg.num_heads
+    nope, rope, vhd = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    qa = jnp.einsum("bsd,dr->bsr", h, p["wq_a"].astype(h.dtype))
+    qa = rms_norm(qa, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rf->bsf", qa, p["wq_b"].astype(h.dtype)).reshape(
+        b, 1, hq, nope + rope
+    )
+    kva = jnp.einsum("bsd,dr->bsr", h, p["wkv_a"].astype(h.dtype))
+    c_kv = rms_norm(kva[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = kva[..., m.kv_lora_rank :]
+    sin, cos = rotary_embedding(pos[:, None], rope, cfg.rope_theta)
+    q_rope = apply_rope(q[..., nope:], sin, cos)
+    k_rope = apply_rope(k_rope[:, :, None, :], sin, cos)[:, :, 0, :]
+
+    new = dict(entry)
+    new["c_kv"] = _write_ring(entry["c_kv"], c_kv[:, 0], pos)
+    new["k_rope"] = _write_ring(entry["k_rope"], k_rope[:, 0], pos)
+    new["slot_pos"] = _write_ring(entry["slot_pos"], pos, pos)
+
+    wkv_b = p["wkv_b"].astype(h.dtype).reshape(m.kv_lora_rank, hq, nope + vhd)
+    w_k, w_v = wkv_b[..., :nope], wkv_b[..., nope:]
+    q_abs = jnp.einsum("bshn,rhn->bshr", q[..., :nope], w_k)  # absorbed q
+    scale = 1.0 / jnp.sqrt(jnp.asarray(nope + rope, jnp.float32))
+    s_lat = jnp.einsum("bshr,bcr->bshc", q_abs, new["c_kv"])
+    s_rope = jnp.einsum("bshr,bcr->bshc", q_rope, new["k_rope"])
+    scores = (s_lat + s_rope).astype(jnp.float32) * scale
+    ok = (new["slot_pos"] >= 0) & (pos[:, None] - new["slot_pos"] >= 0)
+    scores = jnp.where(ok[:, None, None, :], scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+    ctx = jnp.einsum("bshc,bcr->bshr", probs, new["c_kv"])
+    o = jnp.einsum("bshr,rhn->bshn", ctx, w_v)  # [b,1,hq,vhd]
+    out = jnp.einsum(
+        "bsf,fd->bsd", o.reshape(b, 1, hq * vhd), p["wo"].astype(h.dtype)
+    )
+    return out, new
+
+
+def _cross_decode(lm: LM, p, entry, x, *, gated):
+    cfg = lm.cfg
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    hq = cfg.num_heads
+    h = rms_norm(x, p["cross_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,df->bsf", h, p["cross_wq"].astype(h.dtype)).reshape(
+        b, 1, hq, hd
+    )
+    o = full_attention(q, entry["ck"], entry["cv"], causal=False, window=0)
+    out = jnp.einsum(
+        "bsf,fd->bsd", o.reshape(b, 1, hq * hd), p["cross_wo"].astype(h.dtype)
+    )
+    if gated:
+        out = out * jnp.tanh(p["cross_gate"].astype(out.dtype))
+    return x + out, entry
+
+
+def _mamba_decode(lm: LM, p, entry, x):
+    cfg, s = lm.cfg, lm.cfg.ssm
+    b = x.shape[0]
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    g, n = s.n_groups, s.d_state
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,df->bsf", h, p["in_proj"].astype(h.dtype))[:, 0]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    conv_new, xbc = conv_decode_step(
+        entry["conv"], xbc, p["conv_w"].astype(h.dtype), p["conv_b"].astype(h.dtype)
+    )
+    xin, bmat, cmat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xin = xin.reshape(b, nh, s.head_dim)
+    bmat = bmat.reshape(b, g, n)
+    cmat = cmat.reshape(b, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    h_new, y = ssm_decode_step(entry["h"], xin, dt, a, bmat, cmat)
+    y = y + xin * p["d_skip"].astype(y.dtype)[None, :, None]
+    y = y.reshape(b, di) * jax.nn.silu(z)
+    y = rms_norm(y, p["ssm_norm"], cfg.norm_eps)
+    out = jnp.einsum("bf,fd->bd", y, p["out_proj"].astype(y.dtype))[:, None]
+    return x + out, {"h": h_new, "conv": conv_new}
+
+
+# ---------------------------------------------------------------------------
+# serve_step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(lm: LM, params, cache, tokens):
+    """One decode step.  tokens [B,1] → (logits [B,1,V], updated cache)."""
+    cfg = lm.cfg
+    pos = cache["pos"]
+    x = params["embed"].astype(lm.compute_dtype)[tokens]
+    x = lm.shard(x, ("batch", "seq", "embed"))
+    new_cache = {"pos": pos + 1}
+
+    for stage in lm.stages:
+        sp = params[stage.name]
+        sc = cache[stage.name]
+        wins = (
+            jnp.asarray(stage.windows, jnp.int32)
+            if stage.windows
+            else jnp.zeros((stage.count,), jnp.int32)
+        )
+
+        def body(h, step, _stage=stage):
+            spp, scc, win = step
+            upd = {}
+            for ld in _stage.body:
+                w = win if ld.window == -1 else jnp.asarray(ld.window)
+                p, entry = spp[ld.name], scc[ld.name]
+                if ld.kind == "mamba":
+                    h, new = _mamba_decode(lm, p, entry, h)
+                elif ld.kind == "cross":
+                    h, new = _cross_decode(lm, p, entry, h, gated=True)
+                else:
+                    h, new = _attn_decode(lm, ld, p, entry, h, pos, w)
+                if ld.with_mlp:
+                    h, _ = lm._mlp(p, h, moe=ld.moe)
+                upd[ld.name] = new
+            return h, upd
+
+        x, updated = jax.lax.scan(body, x, (sp, sc, wins))
+        new_cache[stage.name] = updated
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x, unembed.astype(lm.compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return logits[..., : cfg.vocab_size], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+
+def prefill(lm: LM, params, cache, tokens, *, source_embeds=None):
+    """Run the forward pass over a prompt and populate the cache.
+
+    Returns (logits of last position [B,V], cache).  Collects per-layer K/V
+    (or mamba states) via scan outputs, then scatters the trailing
+    ``min(C, S)`` tokens into each ring buffer.
+    """
+    cfg = lm.cfg
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = params["embed"].astype(lm.compute_dtype)[tokens]
+    source = None
+    if cfg.encoder is not None:
+        source = lm.encode(params, source_embeds)
+    elif cfg.cross_attn is not None:
+        source = source_embeds
+
+    new_cache = {"pos": cache["pos"] + s}
+    for stage in lm.stages:
+        sp = params[stage.name]
+        sc = cache[stage.name]
+        wins = (
+            jnp.asarray(stage.windows, jnp.int32)
+            if stage.windows
+            else jnp.zeros((stage.count,), jnp.int32)
+        )
+
+        def body(h, step, _stage=stage):
+            spp, scc, win = step
+            upd = {}
+            for ld in _stage.body:
+                w = win if ld.window == -1 else jnp.asarray(ld.window)
+                p, entry = spp[ld.name], scc[ld.name]
+                if ld.kind == "mamba":
+                    h, (h_state, conv_tail) = lm._mamba(p, h, return_state=True)
+                    upd[ld.name] = {"h": h_state, "conv": conv_tail}
+                elif ld.kind == "cross":
+                    h, (ck, cv) = lm._cross_attn(p, h, source, gated=True)
+                    upd[ld.name] = {"ck": ck, "cv": cv}
+                else:
+                    h, kv = lm._self_attn(
+                        p, h, window=w, positions=positions, causal=ld.causal
+                    )
+                    e = {}
+                    if cfg.mla is not None:
+                        c_kv, k_rope = kv
+                        e["c_kv"] = _fill_ring(entry["c_kv"], c_kv, s)
+                        e["k_rope"] = _fill_ring(entry["k_rope"], k_rope, s)
+                    else:
+                        k, v = kv
+                        e["k"] = _fill_ring(entry["k"], k, s)
+                        e["v"] = _fill_ring(entry["v"], v, s)
+                    e["slot_pos"] = _fill_ring(
+                        entry["slot_pos"],
+                        jnp.broadcast_to(positions, (b, s)),
+                        s,
+                    )
+                    if ld.with_cross:
+                        h, (ck, cv) = lm._cross_attn(p, h, source, gated=False)
+                        e["ck"], e["cv"] = ck, cv
+                    upd[ld.name] = e
+                if ld.with_mlp:
+                    h, _ = lm._mlp(p, h, moe=ld.moe)
+            return h, upd
+
+        x, updated = jax.lax.scan(body, x, (sp, sc, wins))
+        new_cache[stage.name] = updated
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum(
+        "bd,dv->bv", x[:, -1], unembed.astype(lm.compute_dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return logits[..., : cfg.vocab_size], new_cache
+
+
+def _fill_ring(cache_arr, seq_vals, s: int):
+    """Write the last min(C,S) sequence entries into ring slots pos % C."""
+    c = cache_arr.shape[1]
+    take = min(c, s)
+    vals = seq_vals[:, s - take :]
+    slots = (jnp.arange(s - take, s)) % c
+    return cache_arr.at[:, slots].set(vals.astype(cache_arr.dtype))

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts with capacity-based, gather/scatter dispatch.
+
+Design (TPU adaptation; see DESIGN.md):
+
+The classic GShard dispatch einsum materializes a one-hot tensor
+``[tokens, E, C]`` whose contraction costs ``2·tokens·E·C·d`` FLOPs — with
+E=160 (DeepSeek-V2) that dwarfs the expert FFN itself by >10×.  Instead we
+compute *slot indices* with a cheap per-group cumsum over the one-hot
+routing mask (bool, [T,K,E]) and move tokens with gather/scatter, which
+cost bandwidth, not FLOPs.  All index computation is *group-local*: tokens
+are grouped ``[G, T_g, d]`` with G sharded over the data axes, so scatters
+never cross shards; expert-parallel resharding of the dispatch buffer
+``[G, E, C, d]`` (E over the model axis) is XLA's all-to-all.
+
+Capacity follows the paper's padding story: slots beyond a group's demand
+are zero-filled (dropped-token convention), and the checkpoint sees expert
+tensors as the Fig.-5 ``[n_experts, ...]`` 3-D sub-pattern.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+__all__ = ["moe_block", "capacity_per_group"]
+
+
+def capacity_per_group(tokens_per_group: int, cfg: MoEConfig) -> int:
+    c = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(c, 1)
+
+
+def moe_block(
+    x: jax.Array,
+    router_w: jax.Array,
+    w_gate: jax.Array,
+    w_up: jax.Array,
+    w_down: jax.Array,
+    cfg: MoEConfig,
+    *,
+    groups: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k routed SwiGLU experts.
+
+    x: [B, S, d];  router_w: [d, E];  w_gate/w_up: [E, d, f];  w_down: [E, f, d].
+    Returns (out [B,S,d], aux load-balancing loss scalar).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    g = groups or b
+    n = b * s
+    if n % g:
+        raise ValueError(f"tokens {n} not divisible by groups {g}")
+    t = n // g
+    c = capacity_per_group(t, cfg)
+
+    xg = x.reshape(g, t, d)
+    logits = jnp.einsum("gtd,de->gte", xg, router_w.astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_k, idx_k = jax.lax.top_k(probs, k)  # [g,t,k]
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+
+    # ---- slot assignment (group-local, FLOP-free dispatch) ----------------
+    oh = jax.nn.one_hot(idx_k, e, dtype=jnp.int32)            # [g,t,k,e]
+    ohf = oh.reshape(g, t * k, e)
+    pos = jnp.cumsum(ohf, axis=1) - 1                          # 0-based slot
+    pos = (pos * ohf).sum(-1).reshape(g, t, k)                 # [g,t,k]
+    expert = idx_k                                             # [g,t,k]
+    keep = pos < c                                             # capacity drop
+    slot = jnp.where(keep, expert * c + pos, e * c)            # overflow sink
+
+    gi = jnp.arange(g)[:, None, None]
+    # Gather-based buffer build (§Perf L3): scatter only the int32 token
+    # *indices* into the slot table, then gather token vectors — avoids
+    # materializing the [g,t,k,d] broadcast the float-scatter needed
+    # (t·k ≈ 2.4·e·c at cf=1.25, and int32 indices are d× smaller).
+    tok_of_slot = jnp.full((g, e * c + 1), t, jnp.int32)
+    tok_idx = jnp.broadcast_to(jnp.arange(t)[None, :, None], (g, t, k))
+    tok_of_slot = tok_of_slot.at[gi, slot].set(tok_idx)
+    tok_of_slot = tok_of_slot[:, : e * c]                      # [g,e*c]
+    xg_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), x.dtype)], axis=1)
+    buf = xg_pad[jnp.arange(g)[:, None], tok_of_slot]          # [g,e*c,d]
+    buf = buf.reshape(g, e, c, d)                              # [g,e,c,d]
+
+    # ---- expert FFN (batched over E; EP shards E over the model axis) -----
+    cd = x.dtype
+    gate = jnp.einsum("gecd,edf->gecf", buf, w_gate.astype(cd))
+    up = jnp.einsum("gecd,edf->gecf", buf, w_up.astype(cd))
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(gate) * up, w_down.astype(cd))
+
+    # ---- combine: gather each token's k slots back ------------------------
+    yf = jnp.concatenate([y.reshape(g, e * c, d), jnp.zeros((g, 1, d), cd)], axis=1)
+    y_tok = yf[gi, slot]                                       # [g,t,k,d]
+    w = (gate_k * keep).astype(cd)
+    out = jnp.einsum("gtkd,gtk->gtd", y_tok, w)
+
+    # ---- load-balancing auxiliary loss (Switch/GShard form) ---------------
+    frac_tokens = oh.astype(jnp.float32).sum((1, 2)) / (t * k)  # [g,e]
+    frac_prob = probs.mean(1)                                   # [g,e]
+    aux = e * jnp.mean(jnp.sum(frac_tokens * frac_prob, axis=-1))
+
+    return out.reshape(b, s, d), aux.astype(jnp.float32)

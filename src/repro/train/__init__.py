@@ -1,0 +1,9 @@
+from .data import DataSpec, batch_for_step, global_batch, sample_tokens
+from .optimizer import TrainState, adamw_update, init_state, lr_schedule
+from .steps import make_prefill_step, make_serve_step, make_train_step
+from .trainer import Trainer
+__all__ = [
+    "DataSpec", "batch_for_step", "global_batch", "sample_tokens",
+    "TrainState", "adamw_update", "init_state", "lr_schedule",
+    "make_prefill_step", "make_serve_step", "make_train_step", "Trainer",
+]

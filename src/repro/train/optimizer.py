@@ -1,0 +1,104 @@
+"""AdamW with mixed-precision master weights — the state UCP checkpoints.
+
+The optimizer state is exactly the paper's atom triple: fp32 master weights
+(``fp32``), first moment (``exp_avg``), second moment (``exp_avg_sq``).
+Moments may be stored in bf16 (``moment_dtype``) for the 236B/398B configs
+(DESIGN.md §6) — math always runs in fp32 and casts back on store, and UCP
+atoms record whatever dtype the run used (Targets may up-cast on resume).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+__all__ = ["TrainState", "init_state", "adamw_update", "lr_schedule", "global_norm"]
+
+
+@dataclasses.dataclass
+class TrainState:
+    """Pytree-of-dicts train state (registered as a pytree below)."""
+
+    params: dict
+    exp_avg: dict
+    exp_avg_sq: dict
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.exp_avg, self.exp_avg_sq, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten
+)
+
+
+def init_state(params: dict, moment_dtype=jnp.float32) -> TrainState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return TrainState(
+        params=params,
+        exp_avg=jax.tree.map(zeros, params),
+        exp_avg_sq=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to ``min_lr_ratio``."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * scale
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(
+    state: TrainState, grads: dict, cfg: TrainConfig
+) -> tuple[TrainState, dict]:
+    """One AdamW step (grad clip → moments → bias-corrected update → decay)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, 1e-8
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = m.astype(jnp.float32) * b1 + (1 - b1) * g
+        vf = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)
+        u = (mf / c1) / (jnp.sqrt(vf / c2) + eps)
+        if p.ndim >= 2:  # no weight decay on norms/scalars (standard practice)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        pnew = p.astype(jnp.float32) - lr * u
+        return pnew.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p = jax.tree.leaves_with_path(state.params)
+    new_p, new_m, new_v = {}, {}, {}
+    out = jax.tree.map(upd, state.params, grads, state.exp_avg, state.exp_avg_sq)
+    # out is a tree of 3-tuples; unzip it
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = TrainState(new_params, new_m, new_v, step)
+    return new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,136 @@
+"""Unit + property tests for the UCP shard-layout geometry."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import (
+    DimSpec,
+    MeshSpec,
+    SubFragment,
+    assemble,
+    compute_layout,
+    slice_shard,
+)
+
+
+def test_mesh_rank_coords_roundtrip():
+    mesh = MeshSpec.from_dict({"pipe": 2, "data": 3, "model": 4})
+    assert mesh.size == 24
+    for r in mesh.ranks():
+        assert mesh.rank_of(mesh.coords(r)) == r
+
+
+def test_plain_fragment_slices():
+    mesh = MeshSpec.from_dict({"data": 2, "model": 2})
+    lay = compute_layout((8, 6), [DimSpec(axes=("model",)), DimSpec()], mesh)
+    assert lay.local_shape == (4, 6)
+    # ranks: (d,m) row-major → rank1 = (0,1) → model coord 1 → rows 4:8
+    assert lay.entries[1][0].atom_slice == ((4, 8), (0, 6))
+    # replication over data: rank0 and rank2 hold the same fragment
+    assert lay.fragment_id[0] == lay.fragment_id[2]
+    assert lay.fragment_id[0] != lay.fragment_id[1]
+    assert lay.num_fragments == 2
+
+
+def test_multi_axis_dim_major_minor_order():
+    mesh = MeshSpec.from_dict({"a": 2, "b": 2})
+    lay = compute_layout((8,), [DimSpec(axes=("a", "b"))], mesh)
+    # 4 shards of 2 rows; axis a major
+    starts = {}
+    for r in mesh.ranks():
+        c = mesh.coords(r)
+        starts[(c["a"], c["b"])] = lay.entries[r][0].atom_slice[0][0]
+    assert starts == {(0, 0): 0, (0, 1): 2, (1, 0): 4, (1, 1): 6}
+
+
+def test_uneven_ceil_division_and_empty_shards():
+    mesh = MeshSpec.from_dict({"m": 4})
+    lay = compute_layout((6,), [DimSpec(axes=("m",))], mesh)
+    assert lay.local_shape == (2,)
+    assert lay.entries[0][0].atom_slice == ((0, 2),)
+    assert lay.entries[2][0].atom_slice == ((4, 6),)
+    assert lay.entries[3] == ()  # fully in padding
+    assert lay.covered_fraction(2) == 1.0
+
+
+def test_subfragments_fused_qkv():
+    mesh = MeshSpec.from_dict({"m": 2})
+    parts = (SubFragment("q", 8), SubFragment("k", 4), SubFragment("v", 4))
+    lay = compute_layout((16, 3), [DimSpec(("m",), parts), DimSpec()], mesh)
+    assert lay.local_shape == (8, 3)
+    # rank 0: q rows 0:4 → local 0:4, k rows 8:10 → local 4:6, v 12:14 → 6:8
+    a = [(e.atom_slice[0], e.shard_slice[0]) for e in lay.entries[0]]
+    assert ((0, 4), (0, 4)) in a and ((8, 10), (4, 6)) in a and ((12, 14), (6, 8)) in a
+    # rank 1 gets the complementary halves
+    b = [(e.atom_slice[0], e.shard_slice[0]) for e in lay.entries[1]]
+    assert ((4, 8), (0, 4)) in b and ((10, 12), (4, 6)) in b and ((14, 16), (6, 8)) in b
+
+
+def test_slice_and_assemble_inverse():
+    rng = np.random.default_rng(0)
+    mesh = MeshSpec.from_dict({"data": 2, "model": 3})
+    arr = rng.normal(size=(7, 12)).astype(np.float32)
+    lay = compute_layout(
+        (7, 12), [DimSpec(axes=("data",)), DimSpec(axes=("model",))], mesh
+    )
+    shards = {r: slice_shard(arr, lay, r) for r in mesh.ranks()}
+    out = assemble(lay, shards)
+    np.testing.assert_array_equal(out, arr)
+
+
+def test_assemble_requires_full_coverage():
+    mesh = MeshSpec.from_dict({"m": 2})
+    lay = compute_layout((4,), [DimSpec(axes=("m",))], mesh)
+    with pytest.raises(ValueError, match="not covered"):
+        assemble(lay, {0: np.zeros((2,), np.float32)})
+
+
+@st.composite
+def _layout_case(draw):
+    naxes = draw(st.integers(1, 3))
+    names = [f"ax{i}" for i in range(naxes)]
+    sizes = [draw(st.integers(1, 4)) for _ in range(naxes)]
+    mesh = MeshSpec(tuple(zip(names, sizes)))
+    ndim = draw(st.integers(1, 3))
+    shape = tuple(draw(st.integers(1, 12)) for _ in range(ndim))
+    # random non-overlapping axis assignment
+    perm = draw(st.permutations(names))
+    dims = []
+    k = 0
+    for i in range(ndim):
+        take = draw(st.integers(0, min(2, len(perm) - k)))
+        dims.append(DimSpec(axes=tuple(perm[k : k + take])))
+        k += take
+    return mesh, shape, tuple(dims)
+
+
+@settings(max_examples=60, deadline=None)
+@given(_layout_case())
+def test_property_roundtrip_any_layout(case):
+    """Fundamental invariant: slice-then-assemble is the identity."""
+    mesh, shape, dims = case
+    rng = np.random.default_rng(1)
+    arr = rng.normal(size=shape).astype(np.float32)
+    lay = compute_layout(shape, dims, mesh)
+    shards = {r: slice_shard(arr, lay, r) for r in lay.primary_ranks()}
+    np.testing.assert_array_equal(assemble(lay, shards), arr)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(1, 4),
+    st.lists(st.integers(1, 9), min_size=1, max_size=4),
+    st.integers(0, 10),
+)
+def test_property_subfragment_roundtrip(msize, part_sizes, extra):
+    mesh = MeshSpec.from_dict({"m": msize})
+    parts = tuple(SubFragment(f"p{i}", s) for i, s in enumerate(part_sizes))
+    total = sum(part_sizes)
+    shape = (total, extra + 1)
+    dims = (DimSpec(("m",), parts), DimSpec())
+    rng = np.random.default_rng(2)
+    arr = rng.normal(size=shape).astype(np.float32)
+    lay = compute_layout(shape, dims, mesh)
+    shards = {r: slice_shard(arr, lay, r) for r in mesh.ranks()}
+    np.testing.assert_array_equal(assemble(lay, shards), arr)
