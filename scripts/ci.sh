@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Fast-fail CI for the repo.
+#
+# Stage 1 — import smoke: import every module under src/repro.  A missing
+# module (the failure mode that once broke the whole suite at collection)
+# fails here in seconds instead of deep inside pytest.
+# Stage 2 — the tier-1 suite (see ROADMAP.md).
+#
+# Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python - <<'PY'
+import importlib
+import pkgutil
+import sys
+
+import repro
+
+mods = ["repro"]
+for m in pkgutil.walk_packages(repro.__path__, prefix="repro."):
+    mods.append(m.name)
+
+failed = []
+for name in sorted(mods):
+    try:
+        importlib.import_module(name)
+    except Exception as e:  # noqa: BLE001 - report every import failure
+        failed.append(name)
+        print(f"IMPORT FAIL {name}: {type(e).__name__}: {e}")
+print(f"import-smoke: {len(mods) - len(failed)}/{len(mods)} modules importable")
+if failed:
+    sys.exit(1)
+PY
+
+python -m pytest -x -q "$@"

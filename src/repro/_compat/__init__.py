@@ -1,0 +1,7 @@
+"""Compatibility shims for optional third-party packages.
+
+The container image this repo targets does not ship every dev dependency;
+modules here provide minimal, API-compatible stand-ins that are registered
+only when the real package is absent (see ``tests/conftest.py``).  Nothing
+in ``src/repro`` proper may import from here.
+"""

@@ -1,0 +1,173 @@
+"""Minimal stand-in for the ``hypothesis`` property-testing API.
+
+Registered as ``sys.modules["hypothesis"]`` by ``tests/conftest.py`` **only
+when the real package is not installed**, so the property tests still run as
+seeded randomized tests instead of failing at import.  Supports exactly the
+surface this repo's tests use:
+
+* ``@given(*strategies)`` — runs the test ``max_examples`` times with fresh
+  draws; strategies bind to the *rightmost* parameters (hypothesis
+  semantics), remaining parameters stay visible to pytest as fixtures.
+* ``@settings(max_examples=..., deadline=...)`` — ``max_examples`` honoured,
+  everything else ignored.
+* ``strategies.integers / sampled_from / booleans / composite`` and
+  ``assume``.
+
+Draws are seeded per test function, so failures are reproducible.  This is
+deliberately NOT a shrinking, database-backed hypothesis replacement — it
+fills the gap until the real dependency is available (it is declared in
+``pyproject.toml``).
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+import types
+
+__version__ = "0.0.0-repro-stub"
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def _floats(min_value: float = 0.0, max_value: float = 1.0, **_: object) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def _sampled_from(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: rng.choice(items))
+
+
+def _lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 8, **_) -> _Strategy:
+    def draw(rng: random.Random):
+        n = rng.randint(min_size, max_size)
+        return [elements.example(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def _permutations(seq) -> _Strategy:
+    items = list(seq)
+    return _Strategy(lambda rng: rng.sample(items, len(items)))
+
+
+def _composite(fn):
+    """``@st.composite`` — fn's first arg is the ``draw`` function."""
+
+    def build(*args, **kwargs):
+        def draw_fn(rng: random.Random):
+            return fn(lambda strategy: strategy.example(rng), *args, **kwargs)
+
+        return _Strategy(draw_fn)
+
+    return build
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.booleans = _booleans
+strategies.floats = _floats
+strategies.sampled_from = _sampled_from
+strategies.lists = _lists
+strategies.permutations = _permutations
+strategies.composite = _composite
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _UnsatisfiedAssumption
+    return True
+
+
+def settings(max_examples: int = 20, **_ignored):
+    """Decorator factory; only ``max_examples`` is honoured."""
+
+    def deco(fn):
+        fn._stub_settings = {"max_examples": max_examples}
+        return fn
+
+    return deco
+
+
+class HealthCheck:  # referenced by some suppress_health_check lists
+    function_scoped_fixture = "function_scoped_fixture"
+    too_slow = "too_slow"
+
+
+def given(*strats, **kw_strats):
+    """Run the wrapped test repeatedly with drawn values.
+
+    Positional strategies bind to the rightmost parameters of the test
+    function; any leading parameters remain pytest fixtures (the wrapper's
+    ``__signature__`` exposes only those).
+    """
+
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters)
+        if kw_strats:
+            drawn = {name: s for name, s in kw_strats.items()}
+            fixture_names = [p for p in params if p not in drawn]
+        else:
+            n = len(strats)
+            fixture_names = params[:-n] if n else params
+            drawn = dict(zip(params[len(params) - len(strats):], strats))
+
+        def wrapper(**fixtures):
+            cfg = getattr(wrapper, "_stub_settings", None) or getattr(
+                fn, "_stub_settings", {}
+            )
+            max_examples = cfg.get("max_examples") or 20
+            rng = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            ran = 0
+            attempts = 0
+            while ran < max_examples and attempts < max_examples * 20:
+                attempts += 1
+                values = {name: s.example(rng) for name, s in drawn.items()}
+                try:
+                    fn(**fixtures, **values)
+                except _UnsatisfiedAssumption:
+                    continue
+                ran += 1
+            if ran == 0:
+                # Mirror hypothesis's Unsatisfied error: a test that executed
+                # zero examples must not silently pass.
+                raise RuntimeError(
+                    f"{fn.__qualname__}: assume() rejected all "
+                    f"{attempts} generated examples"
+                )
+
+        # No functools.wraps: pytest must not unwrap to fn (whose signature
+        # includes the drawn parameters and would be resolved as fixtures).
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__signature__ = inspect.Signature(
+            [
+                inspect.Parameter(p, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+                for p in fixture_names
+            ]
+        )
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return deco

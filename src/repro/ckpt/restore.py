@@ -14,14 +14,14 @@ exactly those bytes —
 ``read_region_from_dist`` additionally supports serving an arbitrary
 region from a *distributed* checkpoint by unioning overlapping fragments
 on the fly — this powers the beyond-paper "direct reshard" fast path
-benchmarked in benchmarks/bench_transform_load.py (skipping atom
-materialization when the Source can stream straight into the Target).
+benchmarked in ``benchmarks/bench_checkpointing.py`` (``bench_transform_load``,
+skipping atom materialization when the Source can stream straight into the
+Target).
 """
 
 from __future__ import annotations
 
 import math
-from typing import Mapping
 
 import jax
 import numpy as np
@@ -63,8 +63,18 @@ def read_region_from_dist(
     region = tuple(slice(*r.indices(s)) for r, s in zip(region, spec.runtime_shape))
     shape = tuple(r.stop - r.start for r in region)
     out = np.zeros(shape, dtype=resolve_dtype(dtype))
+    # Distinct fragments are pairwise disjoint, so one rank per fragment
+    # suffices and once the region is fully covered the remaining ranks
+    # cannot contribute — skip their shard files entirely (the DIRECT case
+    # covers after a single read).
+    total = math.prod(shape)
+    covered = 0
+    seen_frags: set[int] = set()
     for rank in ckpt.writing_ranks(name, kind):
-        touched = False
+        frag = layout.fragment_id[rank]
+        if frag in seen_frags:
+            continue
+        seen_frags.add(frag)
         shard = None
         for e in layout.entries[rank]:
             ovs = []
@@ -89,8 +99,10 @@ def read_region_from_dist(
                 slice(lo - r.start, hi - r.start) for (lo, hi), r in zip(ovs, region)
             )
             out[dst_idx] = np.asarray(shard[src_idx]).astype(out.dtype)
-            touched = True
+            covered += math.prod(hi - lo for lo, hi in ovs)
         del shard
+        if covered >= total:
+            break
     return out
 
 

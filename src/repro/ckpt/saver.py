@@ -109,6 +109,7 @@ class AsyncSaver:
         self._q: queue.Queue = queue.Queue()
         self._results: list[SaveResult] = []
         self._errors: list[BaseException] = []
+        self._closed = False
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
@@ -116,6 +117,9 @@ class AsyncSaver:
         while True:
             item = self._q.get()
             if item is None:
+                # Mark the sentinel consumed, or unfinished_tasks stays at 1
+                # and any wait() after close() blocks in q.join() forever.
+                self._q.task_done()
                 return
             fn = item
             try:
@@ -126,6 +130,12 @@ class AsyncSaver:
                 self._q.task_done()
 
     def submit(self, state: TrainState, plan: ShardingPlan, step: int, root, **kw):
+        # A job enqueued behind the close() sentinel would never run and
+        # wait() would block on it forever — refuse loudly instead.
+        if self._closed:
+            raise RuntimeError(
+                "AsyncSaver.submit() after close(); create a new saver"
+            )
         self.check()
         snap = snapshot_state(state)  # blocking: consistent cut of the state
 
@@ -146,6 +156,12 @@ class AsyncSaver:
             raise RuntimeError("async checkpoint save failed") from err
 
     def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
         self._q.join()
         self._q.put(None)
         self._thread.join(timeout=10)
+        # Surface errors from the final drained saves — otherwise a failed
+        # last checkpoint before shutdown is silently dropped.
+        self.check()

@@ -1,0 +1,49 @@
+"""``repro.dist`` — the distribution layer the whole system codes against.
+
+Two modules:
+
+* :mod:`repro.dist.sharding` — the declarative sharding-rule table.  One
+  call (:func:`~repro.dist.sharding.make_plan`) maps a model's parameter
+  registry onto a mesh and returns a :class:`~repro.dist.sharding.ShardingPlan`
+  from which *both* the runtime ``PartitionSpec`` trees and the UCP
+  checkpoint :class:`~repro.core.patterns.ParamSpec`\\ s are derived — the
+  single-source-of-truth property (paper §3.1–3.2) that makes checkpoints
+  and runtime layouts impossible to drift apart.
+* :mod:`repro.dist.collectives` — compressed gradient collectives
+  (block-wise int8 quantization with error feedback) usable under
+  ``shard_map``.
+"""
+
+import os
+
+import jax
+
+# Sharding-invariant RNG is a distribution-layer invariant: the same seed
+# must produce the same initial weights on ANY mesh, or cross-mesh loss
+# comparisons (and the paper's Fig. 6/7 reconfiguration experiments) are
+# meaningless.  jax's legacy threefry lowering generates different values
+# when the output is sharded; the partitionable lowering is invariant by
+# construction.  An explicit JAX_THREEFRY_PARTITIONABLE in the environment
+# (e.g. to reproduce values from a legacy-RNG run) wins over this default.
+if os.environ.get("JAX_THREEFRY_PARTITIONABLE") is None:
+    jax.config.update("jax_threefry_partitionable", True)
+
+from .collectives import compressed_psum, dequantize_int8, quantize_int8
+from .sharding import (
+    ShardingPlan,
+    cache_pspecs,
+    make_plan,
+    make_sharder,
+    vocab_multiple,
+)
+
+__all__ = [
+    "ShardingPlan",
+    "cache_pspecs",
+    "compressed_psum",
+    "dequantize_int8",
+    "make_plan",
+    "make_sharder",
+    "quantize_int8",
+    "vocab_multiple",
+]

@@ -1,0 +1,87 @@
+"""Compressed gradient collectives: block-wise int8 + error feedback.
+
+Elastic reconfiguration (the paper's headline scenario) often lands a run on
+*fewer* chips with *worse* interconnect than it started on; gradient
+compression keeps the data-parallel all-reduce viable there.  The scheme is
+the standard 1-bit-Adam-family construction:
+
+* :func:`quantize_int8` — per-block max-scaled int8.  Each block of
+  ``block`` consecutive elements is scaled by ``max|block| / 127``, so the
+  worst-case element error is ``max|block| / 254`` and the wire format is
+  ``n`` int8 payload bytes + one fp32 scale per block (~3.9× smaller than
+  fp32 at ``block=256``).
+* :func:`compressed_psum` — an error-feedback all-reduce for use **inside**
+  ``shard_map``: the local residual from the previous step is added before
+  quantization and the new residual is returned to the caller, so
+  compression noise does not accumulate across steps (the *sum* of synced
+  gradients tracks the sum of true gradients to within one step's
+  quantization error).
+
+Everything is pure ``jnp`` — jit/shard_map-traceable, static shapes.
+
+Note on wire bytes: ``(q, scales)`` is the wire *format* (what a production
+deployment would allgather — per-participant payloads cannot be summed
+int8-to-int8 because scales differ).  This reference implementation models
+the *error* behaviour exactly but performs the ``psum`` itself on the
+dequantized fp32 tensor, so on real hardware it would not yet save
+interconnect bandwidth; swapping the ``psum`` for an int8 allgather +
+local reduction is a kernel-level optimization left to a later PR.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum"]
+
+
+def quantize_int8(x: jax.Array, *, block: int = 256) -> tuple[jax.Array, jax.Array]:
+    """Block-wise max-scaled int8 quantization.
+
+    Returns ``(q, scales)`` where ``q`` is int8 of shape ``[nblocks, block]``
+    (zero-padded past ``x.size``) and ``scales`` is fp32 of shape
+    ``[nblocks]``.  All-zero blocks quantize to zeros with scale 0.
+    """
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    nblocks = -(-n // block)
+    flat = jnp.pad(flat, (0, nblocks * block - n))
+    blocks = flat.reshape(nblocks, block)
+    scales = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q, scales.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scales: jax.Array, shape) -> jax.Array:
+    """Inverse of :func:`quantize_int8` (drops the block padding)."""
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    size = math.prod(shape)
+    return flat[:size].reshape(shape)
+
+
+def compressed_psum(
+    grad: jax.Array,
+    err: jax.Array,
+    *,
+    axis_name: str,
+    block: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Error-feedback compressed all-reduce (call under ``shard_map``).
+
+    ``grad`` is this step's local gradient, ``err`` the residual carried
+    from the previous step (zeros at step 0).  Returns
+    ``(synced, new_err)``: the all-reduced dequantized gradient and the
+    residual to feed back next step.  Telescoping over steps, the
+    accumulated synced gradient equals the accumulated true gradient minus
+    only the *final* residual — noise never compounds.
+    """
+    acc = grad.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scales = quantize_int8(acc, block=block)
+    sent = dequantize_int8(q, scales, acc.shape)
+    new_err = acc - sent
+    synced = jax.lax.psum(sent, axis_name)
+    return synced.astype(grad.dtype), new_err.astype(err.dtype)

@@ -1,0 +1,414 @@
+"""The sharding rule table: logical parameter axes → mesh axes, declaratively.
+
+This module is the system's answer to the paper's §3.2 observation that every
+parameter's checkpoint pattern (unique / replicated / fragment / average) is
+*derivable* from one declarative description of how state lays over the mesh.
+Models declare parameters with logical axis names (``vocab``, ``heads``,
+``qkv_fused``, ``expert``, ...; see :class:`repro.models.common.ParamDef`);
+:func:`make_plan` applies one rule table to produce a :class:`ShardingPlan`
+from which everything else is computed:
+
+* the runtime ``jax.sharding.PartitionSpec`` for every parameter and every
+  optimizer-state kind (``partition_specs`` / ``moment_partition_specs`` /
+  ``state_pspecs``),
+* the UCP :class:`~repro.core.patterns.ParamSpec` per parameter — per-kind
+  :class:`~repro.core.patterns.StateLayoutSpec` dims, fused sub-fragments,
+  ``stacked_dim`` tags, vocab padding — which the checkpoint layer
+  round-trips through :class:`~repro.core.dist_ckpt.DistManifest`.
+
+The rule table
+--------------
+
+Tensor parallelism (``parallel.tensor_parallel``, over ``model_axis``) shards
+the first eligible dimension of every tensor with at least two non-stack
+dimensions; 1-D tensors (norm scales, biases, SSM per-head scalars) are never
+model-sharded, so "norms are replicated" w.r.t. TP falls out of the table:
+
+=============== ===========================================================
+``vocab``        embedding / unembedding rows (padded via
+                 :func:`vocab_multiple`)
+``qkv_fused``    packed attention / Mamba in-projections — carries the
+                 paper's Fig.-5 *sub-fragments* so each part (q/k/v or
+                 z/x/B/C/dt) shards independently in the checkpoint
+``ssm_fused``    same, for Mamba-2 fused in-projections
+``heads``        per-head projection dims (attention out, MLA up-projs)
+``mlp``          feed-forward hidden dim
+``ssm_inner``    Mamba inner channels (out-projection)
+``ssm_conv``     Mamba conv channels
+=============== ===========================================================
+
+MoE tensors use one of two modes, recorded as ``ShardingPlan.moe_mode``:
+
+* ``"ep"``  — expert parallelism: the ``expert`` dim shards over the model
+  axis.  Chosen when ``parallel.expert_parallel`` and the expert count
+  divides the model-axis size.
+* ``"tp"``  — fallback expert-TP: experts stay whole, ``expert_mlp`` (the
+  per-expert hidden dim) shards over the model axis instead.
+
+ZeRO / FSDP over the data axes diverges **per state kind** — the reason
+:class:`~repro.core.patterns.ParamSpec` stores one layout per kind:
+
+* ``zero=3`` / ``fsdp`` — fp32 master weights *and* Adam moments shard a
+  data dimension (the largest dimension the model axis did not take,
+  preferring evenly-divisible ones);
+* ``zero=1`` (without fsdp) — weights stay replicated over the data axes
+  while moments still shard, i.e. the same parameter is
+  ``Pattern.REPLICATED`` in fp32 and ``Pattern.FRAGMENT`` in the moments.
+
+Pipeline parallelism is just a mesh axis: when ``parallel.pipe_axis`` names a
+mesh axis, the leading layer-stack dim of every scan-stacked parameter shards
+over it and ``stacked_dim=0`` is tagged so save/load can regroup stages.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Mapping
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import ModelConfig, ParallelismConfig
+from repro.core.layout import DimSpec, MeshSpec, SubFragment
+from repro.core.patterns import ParamSpec, StateKind, StateLayoutSpec
+from repro.core.pytree import tree_map_with_path
+from repro.models.common import ParamDef, ParamRegistry
+
+__all__ = [
+    "ShardingPlan",
+    "make_plan",
+    "make_sharder",
+    "vocab_multiple",
+    "cache_pspecs",
+]
+
+
+# Logical axes tensor parallelism may claim (first eligible dim wins, so the
+# model axis is used at most once per tensor).
+_TP_AXES = frozenset(
+    {"vocab", "qkv_fused", "ssm_fused", "heads", "mlp", "ssm_inner", "ssm_conv"}
+)
+
+
+def vocab_multiple(parallel: ParallelismConfig, mesh: MeshSpec) -> int:
+    """Alignment multiple for the vocab dim of embedding/unembedding tables.
+
+    The runtime vocab is padded up to a multiple of the product of the mesh
+    axes that shard it: the model axis under tensor parallelism, otherwise
+    the data axes (which take the largest free dim — the vocab — when TP is
+    off).  The padding is runtime-only; UCP atoms store the logical vocab
+    and ``StripPadding`` / re-pad absorb Source→Target multiple changes.
+    """
+    if parallel.tensor_parallel and mesh.has_axis(parallel.model_axis):
+        return max(1, mesh.axis_size(parallel.model_axis))
+    m = 1
+    for a in parallel.data_axes:
+        if mesh.has_axis(a):
+            m *= mesh.axis_size(a)
+    return max(1, m)
+
+
+def _pspec_entry(dim: DimSpec):
+    if not dim.axes:
+        return None
+    return dim.axes[0] if len(dim.axes) == 1 else tuple(dim.axes)
+
+
+def _pspec(spec: StateLayoutSpec) -> PartitionSpec:
+    return PartitionSpec(*[_pspec_entry(d) for d in spec.dims])
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """One run's complete state-distribution description.
+
+    ``mesh``         the logical mesh the plan is laid over
+    ``param_specs``  per-parameter :class:`ParamSpec` (per-kind layouts,
+                     fused parts, padding, ``stacked_dim``) — exactly what
+                     :class:`~repro.core.dist_ckpt.DistManifest` persists
+    ``moe_mode``     ``"ep"`` | ``"tp"`` | ``"none"`` (see module docstring)
+    """
+
+    mesh: MeshSpec
+    param_specs: dict[str, ParamSpec]
+    moe_mode: str = "none"
+
+    @property
+    def partition_specs(self) -> dict[str, PartitionSpec]:
+        """Runtime PartitionSpec per parameter (fp32 master weights)."""
+        return {
+            n: _pspec(s.states[StateKind.FP32]) for n, s in self.param_specs.items()
+        }
+
+    @property
+    def moment_partition_specs(self) -> dict[str, PartitionSpec]:
+        """Runtime PartitionSpec per parameter for the Adam moments."""
+        return {
+            n: _pspec(s.states[StateKind.EXP_AVG]) for n, s in self.param_specs.items()
+        }
+
+    def state_pspecs(self) -> dict[str, dict[str, PartitionSpec]]:
+        """PartitionSpec trees for every TrainState field, by flat path."""
+        return {
+            "params": self.partition_specs,
+            "exp_avg": self.moment_partition_specs,
+            "exp_avg_sq": {
+                n: _pspec(s.states[StateKind.EXP_AVG_SQ])
+                for n, s in self.param_specs.items()
+            },
+        }
+
+
+# ---------------------------------------------------------------------------
+# The rule table
+# ---------------------------------------------------------------------------
+
+
+def _moe_mode(cfg: ModelConfig, parallel: ParallelismConfig, mesh: MeshSpec) -> str:
+    if cfg.moe is None:
+        return "none"
+    if (
+        parallel.expert_parallel
+        and mesh.has_axis(parallel.model_axis)
+        and cfg.moe.num_experts % mesh.axis_size(parallel.model_axis) == 0
+    ):
+        return "ep"
+    return "tp"
+
+
+def _spec_for_def(
+    d: ParamDef,
+    cfg: ModelConfig,
+    parallel: ParallelismConfig,
+    *,
+    has_model: bool,
+    pipe: str | None,
+    data_axes: tuple[str, ...],
+    dsize: int,
+    moe_mode: str,
+    weights_over_data: bool,
+) -> ParamSpec:
+    runtime = tuple(d.shape)
+    logical = tuple(
+        cfg.vocab_size if ax == "vocab" else s for ax, s in zip(d.axes, runtime)
+    )
+    nbody = sum(1 for ax in d.axes if ax != "layers")
+
+    assigned: list[tuple[str, ...]] = [() for _ in runtime]
+    if pipe and d.stacked and d.axes[0] == "layers":
+        assigned[0] = (pipe,)
+    if has_model:
+        for i, ax in enumerate(d.axes):
+            if ax == "expert":
+                eligible = moe_mode == "ep"
+            elif ax == "expert_mlp":
+                eligible = moe_mode == "tp" and parallel.tensor_parallel
+            else:
+                eligible = (
+                    ax in _TP_AXES and parallel.tensor_parallel and nbody >= 2
+                )
+            if eligible:
+                assigned[i] = (parallel.model_axis,)
+                break
+
+    # ZeRO/FSDP dimension: largest free dim the data axes can tile, preferring
+    # evenly-divisible ones so runtime shards never need GSPMD padding.
+    data_dim: int | None = None
+    if data_axes:
+        candidates = [
+            i for i, a in enumerate(assigned) if not a and runtime[i] >= dsize
+        ]
+        if candidates:
+            data_dim = min(
+                candidates, key=lambda i: (runtime[i] % dsize != 0, -runtime[i], i)
+            )
+
+    weight_dims: list[DimSpec] = []
+    moment_dims: list[DimSpec] = []
+    for i in range(len(runtime)):
+        parts = None
+        if d.parts is not None and i == d.parts_dim:
+            parts = tuple(SubFragment(n, s) for n, s in d.parts)
+        w_axes = m_axes = assigned[i]
+        if i == data_dim:
+            m_axes = assigned[i] + data_axes
+            if weights_over_data:
+                w_axes = m_axes
+        weight_dims.append(DimSpec(tuple(w_axes), parts))
+        moment_dims.append(DimSpec(tuple(m_axes), parts))
+
+    weights = StateLayoutSpec(tuple(weight_dims), parallel.param_dtype)
+    moments = StateLayoutSpec(tuple(moment_dims), parallel.moment_dtype)
+    return ParamSpec(
+        name=d.path,
+        logical_shape=logical,
+        runtime_shape=runtime,
+        states={
+            StateKind.FP32: weights,
+            StateKind.EXP_AVG: moments,
+            StateKind.EXP_AVG_SQ: moments,
+        },
+        stacked_dim=d.stacked_dim,
+        kind=d.kind,
+    )
+
+
+def make_plan(
+    cfg: ModelConfig,
+    registry: ParamRegistry,
+    parallel: ParallelismConfig,
+    mesh: MeshSpec,
+) -> ShardingPlan:
+    """Apply the rule table to every registered parameter.
+
+    Deterministic in (``cfg``, registry shapes, ``parallel``, ``mesh``):
+    two processes building the same run always derive structurally equal
+    plans, which is what makes crash-restart resume take the DIRECT path.
+    """
+    if parallel.local_updates:
+        # params_to_average needs a leading replica dim on every runtime
+        # shape (ParamSpec.average) plus trainer support for divergent
+        # per-group state; refuse loudly rather than silently producing a
+        # plan that checkpoints local-update runs as plain replicated state.
+        raise NotImplementedError(
+            "local_updates (params_to_average) is not wired into make_plan yet"
+        )
+    has_model = mesh.has_axis(parallel.model_axis)
+    pipe = (
+        parallel.pipe_axis
+        if parallel.pipe_axis and mesh.has_axis(parallel.pipe_axis)
+        else None
+    )
+    data_axes = tuple(
+        a
+        for a in parallel.data_axes
+        if mesh.has_axis(a) and a != pipe and a != parallel.model_axis
+    )
+    dsize = math.prod(mesh.axis_size(a) for a in data_axes) if data_axes else 1
+    moe_mode = _moe_mode(cfg, parallel, mesh)
+    weights_over_data = parallel.fsdp or parallel.zero >= 3
+
+    specs = {
+        d.path: _spec_for_def(
+            d,
+            cfg,
+            parallel,
+            has_model=has_model,
+            pipe=pipe,
+            data_axes=data_axes,
+            dsize=dsize,
+            moe_mode=moe_mode,
+            weights_over_data=weights_over_data,
+        )
+        for d in registry
+    }
+    return ShardingPlan(mesh=mesh, param_specs=specs, moe_mode=moe_mode)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding (installed into the model as LM.shard)
+# ---------------------------------------------------------------------------
+
+
+def make_sharder(
+    parallel: ParallelismConfig, jmesh: jax.sharding.Mesh
+) -> Callable[[jax.Array, tuple[str, ...]], jax.Array]:
+    """Build the ``(x, logical_axes) -> x`` activation-sharding callback.
+
+    Logical activation axes map to mesh axes: ``batch`` → the data axes;
+    ``heads`` / ``kv_heads`` / ``vocab`` → the model axis under tensor
+    parallelism; ``seq`` → the model axis under sequence parallelism, but
+    only when TP did not already claim it for this tensor.  An axis is only
+    applied when the dimension divides evenly (shapes are static at trace
+    time), so the constraint never forces GSPMD padding.
+    """
+    sizes = dict(jmesh.shape)
+    data = tuple(a for a in parallel.data_axes if a in sizes)
+    dsize = math.prod(sizes[a] for a in data) if data else 1
+    model = parallel.model_axis if parallel.model_axis in sizes else None
+    msize = sizes[model] if model else 1
+
+    def shard(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+        if not hasattr(x, "ndim") or x.ndim != len(axes):
+            return x
+        entries: list = [None] * len(axes)
+        model_used = False
+        for i, ax in enumerate(axes):
+            if ax == "batch" and data and x.shape[i] % dsize == 0:
+                entries[i] = data if len(data) > 1 else data[0]
+            elif (
+                ax in ("heads", "kv_heads", "vocab")
+                and model
+                and parallel.tensor_parallel
+                and not model_used
+                and x.shape[i] % msize == 0
+            ):
+                entries[i] = model
+                model_used = True
+        if model and parallel.sequence_parallel and not model_used:
+            for i, ax in enumerate(axes):
+                if ax == "seq" and x.shape[i] % msize == 0:
+                    entries[i] = model
+                    break
+        if all(e is None for e in entries):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(jmesh, PartitionSpec(*entries))
+        )
+
+    return shard
+
+
+# ---------------------------------------------------------------------------
+# Decode-cache sharding (used by the serving / dry-run paths)
+# ---------------------------------------------------------------------------
+
+
+def cache_pspecs(cache, parallel: ParallelismConfig, mesh: MeshSpec):
+    """PartitionSpec tree for a decode cache (see ``repro.models.decode``).
+
+    The batch dim shards over the data axes.  Under tensor parallelism the
+    KV-head dim shards over the model axis when it divides; otherwise, with
+    ``parallel.shard_cache_seq`` (flash-decoding style), the cache-length dim
+    shards instead of replicating the whole cache per chip.  Mamba state
+    shards its head dim, conv state its channel dim.
+    """
+    data = tuple(a for a in parallel.data_axes if mesh.has_axis(a))
+    dsize = math.prod(mesh.axis_size(a) for a in data) if data else 1
+    dentry = (data if len(data) > 1 else data[0]) if data else None
+    model = (
+        parallel.model_axis
+        if parallel.tensor_parallel and mesh.has_axis(parallel.model_axis)
+        else None
+    )
+    msize = mesh.axis_size(model) if model else 1
+
+    def spec(path: str, leaf) -> PartitionSpec:
+        shape = tuple(leaf.shape)
+        name = path.split(".")[-1]
+        if name == "pos":
+            return PartitionSpec(dentry if dsize and shape[0] % dsize == 0 else None)
+        entries: list = [None] * len(shape)
+        if dentry is not None and len(shape) > 1 and shape[1] % dsize == 0:
+            entries[1] = dentry  # [stack, batch, ...]
+        if model is not None:
+            if name in ("k", "v", "ck", "cv") and len(shape) == 5:
+                if shape[3] % msize == 0:
+                    entries[3] = model  # KV heads
+                elif parallel.shard_cache_seq and shape[2] % msize == 0:
+                    entries[2] = model  # cache length
+            elif name == "h" and len(shape) == 5 and shape[2] % msize == 0:
+                entries[2] = model  # SSM heads
+            elif name == "conv" and len(shape) == 4 and shape[3] % msize == 0:
+                entries[3] = model  # conv channels
+            elif (
+                name in ("c_kv", "k_rope", "slot_pos")
+                and parallel.shard_cache_seq
+                and len(shape) >= 3
+                and shape[2] % msize == 0
+            ):
+                entries[2] = model
+        return PartitionSpec(*entries)
+
+    return tree_map_with_path(spec, cache)

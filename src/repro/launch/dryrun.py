@@ -255,6 +255,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, args) -> dict:
         "alias_bytes_per_device": getattr(ma, "alias_size_in_bytes", None),
     }
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict] per device
+        ca = ca[0] if ca else {}
     print(f"[{arch} × {shape_name} × {rec['mesh']}] cost_analysis flops:",
           ca.get("flops"), "bytes:", ca.get("bytes accessed"))
     rec["xla_cost_analysis"] = {

@@ -1,9 +1,20 @@
 from .data import DataSpec, batch_for_step, global_batch, sample_tokens
 from .optimizer import TrainState, adamw_update, init_state, lr_schedule
 from .steps import make_prefill_step, make_serve_step, make_train_step
-from .trainer import Trainer
+
 __all__ = [
     "DataSpec", "batch_for_step", "global_batch", "sample_tokens",
     "TrainState", "adamw_update", "init_state", "lr_schedule",
     "make_prefill_step", "make_serve_step", "make_train_step", "Trainer",
 ]
+
+
+def __getattr__(name):
+    # Lazy: trainer imports repro.ckpt.manager, which imports
+    # repro.train.optimizer — an eager re-export here would make
+    # `import repro.ckpt` fail whenever it runs before `import repro.train`.
+    if name == "Trainer":
+        from .trainer import Trainer
+
+        return Trainer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -93,8 +93,6 @@ def adamw_update(
         pnew = p.astype(jnp.float32) - lr * u
         return pnew.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
 
-    flat_p = jax.tree.leaves_with_path(state.params)
-    new_p, new_m, new_v = {}, {}, {}
     out = jax.tree.map(upd, state.params, grads, state.exp_avg, state.exp_avg_sq)
     # out is a tree of 3-tuples; unzip it
     new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))

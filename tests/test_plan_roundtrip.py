@@ -1,0 +1,76 @@
+"""Plan serialization: a ShardingPlan's ParamSpecs written through
+DistManifest.to_json and re-opened must reproduce byte-identical geometry —
+equal specs and equal ShardLayouts for all three StateKinds.  This is the
+property that lets a resuming process (or an offline converter on a laptop)
+reconstruct the exact Source layout from MANIFEST.json alone."""
+
+import json
+
+import pytest
+
+from repro.configs import ParallelismConfig, get_config, reduced
+from repro.core.dist_ckpt import DistManifest
+from repro.core.layout import MeshSpec
+from repro.core.patterns import STATE_KINDS
+from repro.dist.sharding import make_plan, vocab_multiple
+from repro.models import build_model
+
+
+def _plan(arch, mesh_dict, **parallel_kw):
+    cfg = reduced(get_config(arch))
+    mesh = MeshSpec.from_dict(mesh_dict)
+    parallel = ParallelismConfig(**parallel_kw)
+    lm = build_model(cfg, vocab_multiple=vocab_multiple(parallel, mesh))
+    return make_plan(cfg, lm.registry, parallel, mesh), mesh
+
+
+def _roundtrip(manifest: DistManifest) -> DistManifest:
+    return DistManifest.from_json(json.loads(json.dumps(manifest.to_json())))
+
+
+@pytest.mark.parametrize(
+    "arch,mesh_dict,parallel_kw",
+    [
+        ("smollm-360m", {"data": 2, "model": 2}, dict()),                      # zero-3 + TP
+        ("smollm-360m", {"data": 2, "model": 2}, dict(zero=1, fsdp=False)),    # per-kind divergence
+        ("smollm-360m", {"data": 4, "model": 1}, dict(tensor_parallel=False)),
+        ("smollm-360m", {"pipe": 2, "data": 1, "model": 2}, dict(pipe_axis="pipe")),
+        ("mixtral-8x22b", {"data": 1, "model": 4}, dict()),                    # MoE + fused parts
+    ],
+)
+def test_plan_specs_roundtrip_identical_layouts(arch, mesh_dict, parallel_kw):
+    plan, mesh = _plan(arch, mesh_dict, **parallel_kw)
+    manifest = DistManifest(
+        step=3,
+        mesh=mesh,
+        params=dict(plan.param_specs),
+        scalars={"step": 3},
+        config_fingerprint={},
+    )
+    man2 = _roundtrip(manifest)
+    assert man2.mesh == mesh
+    assert set(man2.params) == set(plan.param_specs)
+    for name, spec in plan.param_specs.items():
+        spec2 = man2.params[name]
+        assert spec2 == spec, name
+        assert spec2.stacked_dim == spec.stacked_dim
+        assert spec2.kind == spec.kind
+        for kind in STATE_KINDS:
+            assert spec2.layout_for(kind, mesh) == spec.layout_for(kind, mesh), (
+                name,
+                kind,
+            )
+
+
+def test_roundtrip_preserves_zero1_kind_divergence():
+    """The serialized form must keep weights/moments structurally distinct
+    (ZeRO-1), or a resume would silently take the wrong fast path."""
+    from repro.core.patterns import StateKind
+
+    plan, mesh = _plan("smollm-360m", {"data": 2, "model": 2}, zero=1, fsdp=False)
+    manifest = DistManifest(
+        step=1, mesh=mesh, params=dict(plan.param_specs),
+        scalars={}, config_fingerprint={},
+    )
+    spec = _roundtrip(manifest).params["layers.blk.attn_norm"]
+    assert spec.states[StateKind.FP32].dims != spec.states[StateKind.EXP_AVG].dims
