@@ -22,11 +22,12 @@ from pathlib import Path
 import jax
 import numpy as np
 
-from .common import build_sized, default_mesh, state_nbytes
+from .common import bench_tmpdir, build_sized, default_mesh, state_nbytes
 
 from repro.configs import ParallelismConfig, TrainConfig
 from repro.core.convert import convert_to_ucp
 from repro.core.dist_ckpt import DistCheckpoint
+from repro.ckpt.engine import CheckpointEngine
 from repro.ckpt.manager import CheckpointManager
 from repro.ckpt.restore import RestoreStats, state_from_dist, state_from_ucp
 from repro.ckpt.saver import AsyncSaver, snapshot_state, write_distributed
@@ -34,6 +35,11 @@ from repro.core.layout import MeshSpec
 from repro.dist.sharding import make_plan, vocab_multiple
 from repro.models import build_model
 from repro.train.trainer import Trainer
+
+# Pool width for the "parallel engine" rows (acceptance: workers >= 4).
+# Save pipelines fsync round-trips, so it profits from extra threads.
+PARALLEL_WORKERS = 8
+SAVE_WORKERS = 16
 
 
 def _timeit(fn, n=3):
@@ -45,31 +51,51 @@ def _timeit(fn, n=3):
     return best
 
 
+def _states_equal(a, b) -> bool:
+    """Bit-identical TrainState comparison (leaf-wise)."""
+    la = jax.tree.leaves(a)
+    lb = jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
 # ---------------------------------------------------------------------------
 
 
-def bench_save_cost() -> list[tuple[str, float, str]]:
-    """Fig. 11: saving cost with vs without UCP in the loop."""
+def bench_save_cost(sizes=("small", "medium")) -> list[tuple[str, float, str]]:
+    """Fig. 11: saving cost with vs without UCP in the loop, plus the
+    engine's serial (workers=1) vs parallel (workers>=4) save paths."""
     rows = []
     mesh = default_mesh()
     parallel = ParallelismConfig()
-    for size in ("small", "medium"):
+    for size in sizes:
         cfg, lm, plan, state = build_sized(size, mesh, parallel)
         snap = snapshot_state(state)
         nbytes = state_nbytes(state)
-        with tempfile.TemporaryDirectory() as tmp:
+        with bench_tmpdir() as tmp:
             i = [0]
 
-            def save_plain():
+            def save_serial():
                 i[0] += 1
-                write_distributed(snap, plan, i[0], f"{tmp}/plain{i[0]}")
+                write_distributed(snap, plan, i[0], f"{tmp}/ser{i[0]}", workers=1)
 
-            t_plain = _timeit(save_plain)
+            t_serial = _timeit(save_serial)
+
+            def save_parallel():
+                i[0] += 1
+                write_distributed(
+                    snap, plan, i[0], f"{tmp}/par{i[0]}", workers=SAVE_WORKERS
+                )
+
+            t_par = _timeit(save_parallel)
             # "UCP enabled" = identical save path; conversion is lazy and
             # happens zero times during training.
             def save_ucp_enabled():
                 i[0] += 1
-                write_distributed(snap, plan, i[0], f"{tmp}/ucp{i[0]}")
+                write_distributed(
+                    snap, plan, i[0], f"{tmp}/ucp{i[0]}", workers=SAVE_WORKERS
+                )
 
             t_ucp = _timeit(save_ucp_enabled)
             # async: submit returns after snapshot; writes overlap compute
@@ -82,42 +108,71 @@ def bench_save_cost() -> list[tuple[str, float, str]]:
             t_async_submit = _timeit(save_async)
             saver.wait()
             saver.close()
-        rows.append((f"save_plain_{size}", t_plain * 1e6,
-                     f"{nbytes/1e6/t_plain:.0f}MB/s"))
+        rows.append((f"save_serial_{size}", t_serial * 1e6,
+                     f"{nbytes/1e6/t_serial:.0f}MB/s"))
+        rows.append((f"save_parallel_{size}", t_par * 1e6,
+                     f"speedup={t_serial/t_par:.2f}x"))
         rows.append((f"save_ucp_enabled_{size}", t_ucp * 1e6,
-                     f"ratio={t_ucp/t_plain:.3f}"))
+                     f"ratio={t_ucp/t_par:.3f}"))
         rows.append((f"save_async_submit_{size}", t_async_submit * 1e6,
-                     f"blocking_frac={t_async_submit/t_plain:.3f}"))
+                     f"blocking_frac={t_async_submit/t_par:.3f}"))
     return rows
 
 
-def bench_transform_load() -> list[tuple[str, float, str]]:
-    """Fig. 12: standard load vs UCP convert+load vs direct-reshard."""
+def bench_transform_load(
+    sizes=("small", "medium", "large")
+) -> list[tuple[str, float, str]]:
+    """Fig. 12: standard load vs UCP convert+load vs direct-reshard, with
+    the direct-reshard path benchmarked serial (workers=1) vs parallel."""
     rows = []
     src_mesh = default_mesh(4, 2)
     tgt_mesh = default_mesh(2, 2)
     parallel = ParallelismConfig()
     jmesh = jax.make_mesh((1, 1), ("data", "model"))
-    for size in ("small", "medium", "large"):
+    for size in sizes:
         cfg, lm, plan_src, state = build_sized(size, src_mesh, parallel)
         plan_tgt = make_plan(cfg, lm.registry, parallel, tgt_mesh)
         snap = snapshot_state(state)
         nbytes = state_nbytes(state)
-        with tempfile.TemporaryDirectory() as tmp:
+        with bench_tmpdir() as tmp:
             write_distributed(snap, plan_src, 1, f"{tmp}/ck")
             ck = DistCheckpoint.open(f"{tmp}/ck")
+            eng_ser = CheckpointEngine(workers=1)
+            # cache big enough that shards+atoms of the medium size coexist
+            eng_par = CheckpointEngine(
+                workers=PARALLEL_WORKERS, handle_cache_bytes=2 << 30
+            )
 
             # standard load: same layout, per-rank reads (the baseline)
-            t_std = _timeit(lambda: state_from_dist(ck, plan_src, jmesh), n=2)
+            t_std = _timeit(
+                lambda: state_from_dist(ck, plan_src, jmesh, engine=eng_par), n=2
+            )
 
             # UCP path: convert once + load under the new layout
             t0 = time.perf_counter()
-            ucp, cstats = convert_to_ucp(ck, f"{tmp}/ucp", workers=4)
+            ucp, cstats = convert_to_ucp(ck, f"{tmp}/ucp", engine=eng_par)
             t_conv = time.perf_counter() - t0
-            t_load = _timeit(lambda: state_from_ucp(ucp, plan_tgt, jmesh), n=2)
+            t_load = _timeit(
+                lambda: state_from_ucp(ucp, plan_tgt, jmesh, engine=eng_par), n=2
+            )
 
-            # beyond-paper: direct reshard from the distributed ckpt
-            t_direct = _timeit(lambda: state_from_dist(ck, plan_tgt, jmesh), n=2)
+            # beyond-paper: direct reshard from the distributed ckpt —
+            # serial vs indexed-parallel engine, bit-identical by contract.
+            t_direct_ser = _timeit(
+                lambda: state_from_dist(ck, plan_tgt, jmesh, engine=eng_ser), n=2
+            )
+            t_direct = _timeit(
+                lambda: state_from_dist(ck, plan_tgt, jmesh, engine=eng_par), n=3
+            )
+            if size == "medium":
+                s_ser = state_from_dist(ck, plan_tgt, jmesh, engine=eng_ser)
+                s_par = state_from_dist(ck, plan_tgt, jmesh, engine=eng_par)
+                assert _states_equal(s_ser, s_par), (
+                    "parallel direct-reshard restore diverged from serial"
+                )
+                del s_ser, s_par
+            eng_ser.close()
+            eng_par.close()
 
         rows.append((f"std_load_{size}", t_std * 1e6,
                      f"{nbytes/1e6/t_std:.0f}MB/s"))
@@ -125,7 +180,10 @@ def bench_transform_load() -> list[tuple[str, float, str]]:
                      f"{cstats.throughput_mb_s():.0f}MB/s"))
         rows.append((f"ucp_load_{size}", t_load * 1e6,
                      f"convert+load/std={(t_conv+t_load)/t_std:.2f}x"))
+        rows.append((f"direct_reshard_serial_{size}", t_direct_ser * 1e6,
+                     f"{nbytes/1e6/t_direct_ser:.0f}MB/s"))
         rows.append((f"direct_reshard_{size}", t_direct * 1e6,
+                     f"speedup={t_direct_ser/t_direct:.2f}x;"
                      f"vs_ucp_path={(t_conv+t_load)/t_direct:.2f}x"))
     return rows
 
@@ -137,7 +195,7 @@ def bench_conversion_scaling() -> list[tuple[str, float, str]]:
     parallel = ParallelismConfig()
     cfg, lm, plan, state = build_sized("large", mesh, parallel)
     snap = snapshot_state(state)
-    with tempfile.TemporaryDirectory() as tmp:
+    with bench_tmpdir() as tmp:
         write_distributed(snap, plan, 1, f"{tmp}/ck")
         ck = DistCheckpoint.open(f"{tmp}/ck")
         base = None
@@ -183,7 +241,7 @@ def bench_correctness() -> list[tuple[str, float, str]]:
             ckpt_dir=tmp, save_interval=save_interval, async_save=False,
         )
 
-    with tempfile.TemporaryDirectory() as tmp:
+    with bench_tmpdir() as tmp:
         t = trainer(f"{tmp}/base")
         s, _ = t.init_or_restore()
         _, hist = t.run(s, 0, 16)

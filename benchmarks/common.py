@@ -46,6 +46,18 @@ def build_sized(size: str, mesh: MeshSpec, parallel: ParallelismConfig):
     return cfg, lm, plan, state
 
 
+def bench_tmpdir() -> tempfile.TemporaryDirectory:
+    """Checkpoint scratch space for benchmarks.
+
+    Uses the system temp dir (a real, durable-ish filesystem — fsync on a
+    RAM-backed fs would make the save-cost rows fiction).  Set ``BENCH_DIR``
+    to measure a specific mount (NVMe, tmpfs, network fs) instead.
+    """
+    return tempfile.TemporaryDirectory(
+        dir=os.environ.get("BENCH_DIR"), prefix="repro-bench-"
+    )
+
+
 def default_mesh(data=4, model=2) -> MeshSpec:
     return MeshSpec.from_dict({"data": data, "model": model})
 

@@ -1,20 +1,35 @@
 """Benchmark driver — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  Run as::
+Prints ``name,us_per_call,derived`` CSV and (with ``--json``) writes the
+same rows as machine-readable JSON so the perf trajectory records across
+PRs.  Run as::
 
-    PYTHONPATH=src python -m benchmarks.run [--only save_cost,...]
+    PYTHONPATH=src python -m benchmarks.run [--only save_cost,...] \
+        [--sizes small,medium] [--json BENCH_checkpointing.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 import traceback
 
 
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default="", help="comma-separated bench names")
+    p.add_argument(
+        "--sizes", default="",
+        help="comma-separated model sizes (small,medium,large) for the "
+        "benches that take a size ladder; empty = each bench's default",
+    )
+    p.add_argument(
+        "--json", default="", metavar="PATH",
+        help="also write rows as JSON: "
+        '[{"bench","name","us_per_call","derived"}, ...]',
+    )
     args = p.parse_args()
 
     from . import bench_checkpointing as B
@@ -25,19 +40,39 @@ def main() -> None:
         "conversion_scaling": B.bench_conversion_scaling,  # §3.2 Table 2
         "correctness": B.bench_correctness,           # Fig. 6/7, Table 3
     }
+    sized = {"save_cost", "transform_load"}  # benches accepting sizes=...
+    sizes = tuple(s for s in args.sizes.split(",") if s)
     only = {s for s in args.only.split(",") if s}
     print("name,us_per_call,derived")
+    records: list[dict] = []
     failed = False
     for name, fn in benches.items():
         if only and name not in only:
             continue
         try:
-            for row, us, derived in fn():
+            rows = fn(sizes=sizes) if sizes and name in sized else fn()
+            for row, us, derived in rows:
                 print(f"{row},{us:.0f},{derived}", flush=True)
+                records.append(
+                    {"bench": name, "name": row, "us_per_call": us,
+                     "derived": derived}
+                )
         except Exception:
             failed = True
             traceback.print_exc()
             print(f"{name},NaN,ERROR", flush=True)
+            records.append(
+                {"bench": name, "name": name, "us_per_call": None,
+                 "derived": "ERROR"}
+            )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {"schema": "repro-bench/v1", "recorded_at": time.time(),
+                 "rows": records},
+                f, indent=1,
+            )
+            f.write("\n")
     if failed:
         sys.exit(1)
 

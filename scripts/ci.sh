@@ -5,6 +5,9 @@
 # module (the failure mode that once broke the whole suite at collection)
 # fails here in seconds instead of deep inside pytest.
 # Stage 2 — the tier-1 suite (see ROADMAP.md).
+# Stage 3 — benchmark smoke: a small-size save-cost run with --json, so a
+# regression that breaks the perf-trajectory recording fails in CI rather
+# than on the next real benchmark run.
 #
 # Usage: scripts/ci.sh [extra pytest args...]
 set -euo pipefail
@@ -35,3 +38,19 @@ if failed:
 PY
 
 python -m pytest -x -q "$@"
+
+smoke_json="$(mktemp /tmp/bench_smoke.XXXXXX.json)"
+python -m benchmarks.run --only save_cost --sizes small --json "$smoke_json" >/dev/null
+python - "$smoke_json" <<'PY'
+import json
+import sys
+
+doc = json.load(open(sys.argv[1]))
+rows = doc["rows"]
+assert rows, "benchmark smoke produced no rows"
+assert all(r["derived"] != "ERROR" for r in rows), f"benchmark smoke errored: {rows}"
+names = {r["name"] for r in rows}
+assert any(n.startswith("save_parallel_") for n in names), names
+print(f"bench-smoke: {len(rows)} rows ok")
+PY
+rm -f "$smoke_json"

@@ -1,7 +1,9 @@
+from .engine import CheckpointEngine, FragmentIndex, HandleCache, default_engine
 from .manager import CheckpointManager, RestoreInfo
 from .restore import read_region_from_dist, state_from_dist, state_from_ucp
 from .saver import AsyncSaver, SaveResult, snapshot_state, write_distributed
 __all__ = [
+    "CheckpointEngine", "FragmentIndex", "HandleCache", "default_engine",
     "CheckpointManager", "RestoreInfo", "read_region_from_dist",
     "state_from_dist", "state_from_ucp", "AsyncSaver", "SaveResult",
     "snapshot_state", "write_distributed",

@@ -1,0 +1,30 @@
+"""Checkpoint I/O engine — public re-export.
+
+The implementation lives in :mod:`repro.core.engine` so the device-free
+core formats (``dist_ckpt``, ``atoms``, ``convert``) can use the handle
+cache and worker pool without importing the jax-facing ``repro.ckpt``
+layer.  This module is the documented import point for engine users at the
+checkpointing API level::
+
+    from repro.ckpt.engine import CheckpointEngine
+
+    eng = CheckpointEngine(workers=8)
+    write_distributed(snap, plan, step, root, engine=eng)
+    state = state_from_dist(ckpt, plan, jmesh, engine=eng)
+"""
+
+from repro.core.engine import (
+    CheckpointEngine,
+    FragmentIndex,
+    HandleCache,
+    default_engine,
+    default_workers,
+)
+
+__all__ = [
+    "CheckpointEngine",
+    "FragmentIndex",
+    "HandleCache",
+    "default_engine",
+    "default_workers",
+]

@@ -24,6 +24,7 @@ import jax
 from repro.core.atoms import UcpCheckpoint
 from repro.core.convert import ConvertStats, convert_to_ucp
 from repro.core.dist_ckpt import DistCheckpoint
+from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.plan import ResumeMode, TargetSpec, plan_resume
 from repro.dist.sharding import ShardingPlan
 from repro.train.optimizer import TrainState
@@ -53,15 +54,27 @@ class CheckpointManager:
         keep_last: int = 3,
         save_interval: int = 50,
         async_save: bool = True,
+        max_pending_saves: int = 2,
+        io_workers: int | None = None,
         config_fingerprint: Mapping[str, Any] | None = None,
     ):
+        """``io_workers``: width of the checkpoint I/O pool shared by the
+        save, convert and restore paths (None = process default;
+        1 = fully serial).  ``max_pending_saves`` bounds how many async
+        save snapshots may be in flight before ``save()`` applies
+        backpressure."""
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.plan = plan
         self.keep_last = keep_last
         self.save_interval = save_interval
         self.config_fingerprint = dict(config_fingerprint or {})
-        self._async = AsyncSaver() if async_save else None
+        self.engine = (
+            CheckpointEngine(workers=io_workers)
+            if io_workers is not None
+            else default_engine()
+        )
+        self._async = AsyncSaver(max_pending=max_pending_saves) if async_save else None
 
     # ------------------------------------------------------------------ save
     def step_dir(self, step: int) -> Path:
@@ -77,6 +90,7 @@ class CheckpointManager:
         kw = dict(
             scalars=dict(scalars or {}),
             config_fingerprint=self.config_fingerprint,
+            engine=self.engine,
         )
         if self._async is not None and not block:
             self._async.submit(state, self.plan, step, self.step_dir(step), **kw)
@@ -118,6 +132,7 @@ class CheckpointManager:
         for s in steps[: -self.keep_last] if self.keep_last else []:
             shutil.rmtree(self.step_dir(s), ignore_errors=True)
             shutil.rmtree(Path(str(self.step_dir(s)) + ".ucp"), ignore_errors=True)
+            self.engine.invalidate(self.step_dir(s))
         if steps:
             newest = self.step_dir(steps[-1])
             for p in self.root.glob("step_*"):
@@ -136,11 +151,13 @@ class CheckpointManager:
         *,
         step: int | None = None,
         target_plan: ShardingPlan | None = None,
-        convert_workers: int = 4,
+        convert_workers: int | None = None,
     ) -> tuple[TrainState, RestoreInfo] | None:
         """Resume onto ``jmesh`` under ``target_plan`` (default: own plan).
 
-        Returns None when no committed checkpoint exists (fresh start).
+        ``convert_workers`` overrides the conversion pool width for this
+        call (None = the manager's own engine/pool).  Returns None when no
+        committed checkpoint exists (fresh start).
         """
         plan = target_plan or self.plan
         step = step if step is not None else self.latest_step()
@@ -153,7 +170,7 @@ class CheckpointManager:
         stats = RestoreStats()
         cstats: ConvertStats | None = None
         if rp.mode == ResumeMode.DIRECT:
-            state = state_from_dist(ckpt, plan, jmesh, stats)
+            state = state_from_dist(ckpt, plan, jmesh, stats, engine=self.engine)
         else:
             ucp_dir = Path(str(self.step_dir(step)) + ".ucp")
             if (ucp_dir / "COMMIT").exists():
@@ -161,9 +178,9 @@ class CheckpointManager:
             else:
                 shutil.rmtree(ucp_dir, ignore_errors=True)  # partial convert
                 ucp, cstats = convert_to_ucp(
-                    ckpt, str(ucp_dir), workers=convert_workers
-                )
-            state = state_from_ucp(ucp, plan, jmesh, stats)
+                    ckpt, str(ucp_dir), workers=convert_workers, engine=self.engine
+                )  # explicit convert_workers wins over the manager engine
+            state = state_from_ucp(ucp, plan, jmesh, stats, engine=self.engine)
         info = RestoreInfo(
             step=step,
             mode=rp.mode,

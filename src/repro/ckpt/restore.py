@@ -17,6 +17,13 @@ on the fly — this powers the beyond-paper "direct reshard" fast path
 benchmarked in ``benchmarks/bench_checkpointing.py`` (``bench_transform_load``,
 skipping atom materialization when the Source can stream straight into the
 Target).
+
+All file I/O routes through a :class:`~repro.core.engine.CheckpointEngine`:
+fragment lookups hit the engine's sorted interval index (built once per
+``(checkpoint, param, kind)``), shard/atom files are opened once through its
+handle cache, and ``_build_state`` prefetches every device region
+concurrently over the engine's worker pool.  ``CheckpointEngine(workers=1)``
+degrades to the exact serial order, byte-identical by construction.
 """
 
 from __future__ import annotations
@@ -29,8 +36,9 @@ from jax.sharding import NamedSharding
 
 from repro.core.atoms import UcpCheckpoint
 from repro.core.dist_ckpt import DistCheckpoint
+from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.ops import read_runtime_region
-from repro.core.patterns import ParamSpec, StateKind
+from repro.core.patterns import StateKind
 from repro.core.pytree import unflatten_from_paths
 from repro.core.tensor_io import resolve_dtype
 from repro.dist.sharding import ShardingPlan
@@ -39,9 +47,11 @@ from repro.train.optimizer import TrainState
 __all__ = ["read_region_from_dist", "state_from_ucp", "state_from_dist", "RestoreStats"]
 
 
-def _overlap(a: tuple[int, int], b: tuple[int, int]) -> tuple[int, int] | None:
-    lo, hi = max(a[0], b[0]), min(a[1], b[1])
-    return (lo, hi) if hi > lo else None
+def _canon_region(
+    region: tuple[slice, ...], shape: tuple[int, ...]
+) -> tuple[slice, ...]:
+    """Normalize a device index to concrete unit-step slices over ``shape``."""
+    return tuple(slice(*r.indices(s)) for r, s in zip(region, shape))
 
 
 def read_region_from_dist(
@@ -50,59 +60,43 @@ def read_region_from_dist(
     kind: StateKind,
     region: tuple[slice, ...],
     dtype,
+    *,
+    engine: CheckpointEngine | None = None,
 ) -> np.ndarray:
     """Serve a runtime-coordinate region by unioning source fragments.
 
     When Source and Target layouts are identical, each Target device's
     region coincides with exactly one fragment → one file read (DIRECT).
     Otherwise this is on-the-fly resharding (no atoms materialized).
+
+    The engine's :class:`~repro.core.engine.FragmentIndex` pre-selects the
+    fragments overlapping the region (distinct fragments are pairwise
+    disjoint, so every hit contributes unique elements), and its handle
+    cache keeps each shard file open across regions and parameters.
     """
-    spec = ckpt.manifest.params[name]
-    mesh = ckpt.manifest.mesh
-    layout = spec.layout_for(kind, mesh)
-    region = tuple(slice(*r.indices(s)) for r, s in zip(region, spec.runtime_shape))
+    engine = engine or default_engine()
+    idx = engine.index_for(ckpt, name, kind)
+    region = _canon_region(region, idx.spec.runtime_shape)
     shape = tuple(r.stop - r.start for r in region)
-    out = np.zeros(shape, dtype=resolve_dtype(dtype))
-    # Distinct fragments are pairwise disjoint, so one rank per fragment
-    # suffices and once the region is fully covered the remaining ranks
-    # cannot contribute — skip their shard files entirely (the DIRECT case
-    # covers after a single read).
+    hits = idx.overlapping(region)
+    # Zero-fill only when the fragments don't tile the whole region (the
+    # remainder is alignment padding); fragments are pairwise disjoint so
+    # coverage is a plain sum.
     total = math.prod(shape)
-    covered = 0
-    seen_frags: set[int] = set()
-    for rank in ckpt.writing_ranks(name, kind):
-        frag = layout.fragment_id[rank]
-        if frag in seen_frags:
-            continue
-        seen_frags.add(frag)
-        shard = None
-        for e in layout.entries[rank]:
-            ovs = []
-            ok = True
-            for (a0, a1), r in zip(e.atom_slice, region):
-                ov = _overlap((a0, a1), (r.start, r.stop))
-                if ov is None:
-                    ok = False
-                    break
-                ovs.append(ov)
-            if not ok:
-                continue
-            if shard is None:
-                shard = ckpt.read_shard(rank, name, kind)
-            src_idx = tuple(
-                slice(s0 + (lo - a0), s0 + (hi - a0))
-                for (a0, _), (s0, _), (lo, hi) in zip(
-                    e.atom_slice, e.shard_slice, ovs
-                )
-            )
-            dst_idx = tuple(
-                slice(lo - r.start, hi - r.start) for (lo, hi), r in zip(ovs, region)
-            )
-            out[dst_idx] = np.asarray(shard[src_idx]).astype(out.dtype)
-            covered += math.prod(hi - lo for lo, hi in ovs)
-        del shard
-        if covered >= total:
-            break
+    covered = sum(math.prod(hi - lo for lo, hi in ovs) for _, _, ovs in hits)
+    out = engine.alloc(shape, resolve_dtype(dtype), zero=covered < total)
+    for rank, e, ovs in hits:
+        shard = engine.read_shard(ckpt, rank, name, kind)
+        src_idx = tuple(
+            slice(s0 + (lo - a0), s0 + (hi - a0))
+            for (a0, _), (s0, _), (lo, hi) in zip(e.atom_slice, e.shard_slice, ovs)
+        )
+        dst_idx = tuple(
+            slice(lo - r.start, hi - r.start) for (lo, hi), r in zip(ovs, region)
+        )
+        # Direct assignment: one copy straight into the output, casting in
+        # place when dtypes differ — never an intermediate materialization.
+        out[dst_idx] = shard[src_idx]
     return out
 
 
@@ -112,38 +106,73 @@ class RestoreStats:
         self.arrays = 0
 
 
+_FIELDS: tuple[tuple[str, StateKind], ...] = (
+    ("params", StateKind.FP32),
+    ("exp_avg", StateKind.EXP_AVG),
+    ("exp_avg_sq", StateKind.EXP_AVG_SQ),
+)
+
+
 def _build_state(
     reader,  # (name, kind, region, dtype) -> np.ndarray
     plan: ShardingPlan,
     jmesh: jax.sharding.Mesh,
     step: int,
     stats: RestoreStats | None = None,
+    engine: CheckpointEngine | None = None,
 ) -> TrainState:
     import jax.numpy as jnp
 
+    engine = engine or default_engine()
     pspecs = plan.state_pspecs()
+
     trees: dict[str, dict] = {}
-    for field, kind in (
-        ("params", StateKind.FP32),
-        ("exp_avg", StateKind.EXP_AVG),
-        ("exp_avg_sq", StateKind.EXP_AVG_SQ),
-    ):
+    for field, kind in _FIELDS:
+        # Enumerate every (param, device-region) this state kind will
+        # request and issue the reads concurrently up front; the
+        # make_array callbacks below then serve from the prefetch table
+        # instead of reading serially one device region at a time.
+        # Batching per kind bounds peak prefetch memory to one state copy.
+        shardings: dict[str, NamedSharding] = {}
+        jobs: list[tuple[str, str, tuple[slice, ...]]] = []
+        seen: set[tuple] = set()
+        for name, spec in plan.param_specs.items():
+            sharding = NamedSharding(jmesh, pspecs[field][name])
+            shardings[name] = sharding
+            shape = tuple(spec.runtime_shape)
+            for index in sharding.addressable_devices_indices_map(shape).values():
+                canon = _canon_region(index, shape)
+                key = (name, tuple((r.start, r.stop) for r in canon))
+                if key not in seen:
+                    seen.add(key)
+                    jobs.append((name, spec.states[kind].dtype, canon))
+        results = engine.map(lambda j: reader(j[0], kind, j[2], j[1]), jobs)
+        table = {
+            (n, tuple((r.start, r.stop) for r in canon)): arr
+            for (n, _, canon), arr in zip(jobs, results)
+        }
+
         flat = {}
         for name, spec in plan.param_specs.items():
             dtype = spec.states[kind].dtype
-            sharding = NamedSharding(jmesh, pspecs[field][name])
+            shape = tuple(spec.runtime_shape)
 
-            def cb(index, _n=name, _k=kind, _d=dtype):
-                arr = reader(_n, _k, index, _d)
+            def cb(index, _n=name, _k=kind, _d=dtype, _s=shape):
+                canon = _canon_region(index, _s)
+                arr = table.get((_n, tuple((r.start, r.stop) for r in canon)))
+                if arr is None:  # region jax didn't pre-announce: read now
+                    arr = reader(_n, _k, canon, _d)
                 if stats is not None:
                     stats.bytes_read += arr.nbytes
                 return arr
 
-            flat[name] = jax.make_array_from_callback(
-                tuple(spec.runtime_shape), sharding, cb
-            )
+            flat[name] = jax.make_array_from_callback(shape, shardings[name], cb)
             if stats is not None:
                 stats.arrays += 1
+            # jax copied the callback arrays into its own buffers; the
+            # staging storage can back the next parameter's reads.
+            for key in [k for k in table if k[0] == name]:
+                engine.recycle(table.pop(key))
         trees[field] = unflatten_from_paths(flat)
     return TrainState(
         params=trees["params"],
@@ -158,11 +187,15 @@ def state_from_dist(
     plan: ShardingPlan,
     jmesh: jax.sharding.Mesh,
     stats: RestoreStats | None = None,
+    *,
+    engine: CheckpointEngine | None = None,
 ) -> TrainState:
-    def reader(name, kind, region, dtype):
-        return read_region_from_dist(ckpt, name, kind, region, dtype)
+    engine = engine or default_engine()
 
-    return _build_state(reader, plan, jmesh, int(ckpt.manifest.step), stats)
+    def reader(name, kind, region, dtype):
+        return read_region_from_dist(ckpt, name, kind, region, dtype, engine=engine)
+
+    return _build_state(reader, plan, jmesh, int(ckpt.manifest.step), stats, engine)
 
 
 def state_from_ucp(
@@ -170,9 +203,17 @@ def state_from_ucp(
     plan: ShardingPlan,
     jmesh: jax.sharding.Mesh,
     stats: RestoreStats | None = None,
+    *,
+    engine: CheckpointEngine | None = None,
 ) -> TrainState:
-    def reader(name, kind, region, dtype):
-        atom = ucp.read_atom(name, kind)  # mmap — only the region is touched
-        return read_runtime_region(atom, plan.param_specs[name], region, dtype)
+    engine = engine or default_engine()
 
-    return _build_state(reader, plan, jmesh, int(ucp.manifest.step), stats)
+    def reader(name, kind, region, dtype):
+        # handle-cached mmap — only the region's pages are touched, and the
+        # atom file is opened once across all device regions.
+        atom = engine.read_atom(ucp, name, kind)
+        return read_runtime_region(
+            atom, plan.param_specs[name], region, dtype, alloc=engine.alloc
+        )
+
+    return _build_state(reader, plan, jmesh, int(ucp.manifest.step), stats, engine)

@@ -7,6 +7,8 @@ Public surface:
 * :mod:`repro.core.dist_ckpt`/:mod:`repro.core.atoms` — on-disk formats
 * :mod:`repro.core.ops`      — Extract/Union/StripPadding/GenUcpMetadata/Load
 * :mod:`repro.core.convert`  — Algorithm 1 driver
+* :mod:`repro.core.engine`   — shared I/O engine (fragment index, handle
+  cache, bounded worker pool) all save/convert/restore paths route through
 * :mod:`repro.core.plan`     — lazy reconfiguration planning
 
 Everything here is pure numpy: conversion runs offline, on any host,
@@ -16,6 +18,7 @@ without Source or Target accelerators (paper §3.1).
 from .atoms import AtomInfo, UcpCheckpoint, UcpManifest
 from .convert import ConvertStats, convert_to_ucp
 from .dist_ckpt import DistCheckpoint, DistManifest
+from .engine import CheckpointEngine, FragmentIndex, HandleCache, default_engine
 from .layout import (
     DimSpec,
     IndexEntry,
@@ -50,6 +53,7 @@ __all__ = [
     "AtomInfo", "UcpCheckpoint", "UcpManifest",
     "ConvertStats", "convert_to_ucp",
     "DistCheckpoint", "DistManifest",
+    "CheckpointEngine", "FragmentIndex", "HandleCache", "default_engine",
     "DimSpec", "IndexEntry", "MeshSpec", "ShardLayout", "SubFragment",
     "compute_layout", "normalize_partition_spec",
     "LoadPlan", "ParamLoadPlan", "extract", "gen_ucp_metadata",

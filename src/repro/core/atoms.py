@@ -164,10 +164,17 @@ class UcpCheckpoint:
         return cls(root, manifest)
 
     def read_atom(
-        self, name: str, kind: StateKind, *, mmap: bool = True
+        self, name: str, kind: StateKind, *, mmap: bool = True, cache=None
     ) -> np.ndarray:
+        """Open one atom (mmap).  ``cache``: optional
+        :class:`~repro.core.engine.HandleCache` — a restore serving R device
+        regions per parameter then opens each atom file once, not R times."""
         info = self.manifest.atoms[name]
-        return load_tensor(self.atom_path(name, kind), dtype=info.dtypes[kind], mmap=mmap)
+        path = self.atom_path(name, kind)
+        loader = lambda: load_tensor(path, dtype=info.dtypes[kind], mmap=mmap)
+        if cache is not None:
+            return cache.get(path, loader)
+        return loader()
 
     def total_bytes(self) -> int:
         return sum(p.stat().st_size for p in self.root.glob("atoms/**/*.npy"))

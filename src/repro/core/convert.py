@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
 from typing import Sequence
 
@@ -25,6 +24,7 @@ import numpy as np
 
 from .atoms import AtomInfo, UcpCheckpoint, UcpManifest
 from .dist_ckpt import DistCheckpoint
+from .engine import CheckpointEngine
 from .ops import strip_padding, union
 from .patterns import ParamSpec, StateKind, STATE_KINDS
 from .tensor_io import resolve_dtype
@@ -51,9 +51,14 @@ def _convert_one(
     ucp: UcpCheckpoint,
     spec: ParamSpec,
     streaming: bool,
-) -> tuple[int, int]:
-    """Union + StripPadding + Save for one parameter (all state kinds)."""
-    read = written = 0
+    engine: CheckpointEngine | None = None,
+) -> tuple[int, int, int]:
+    """Union + StripPadding + Save for one parameter (all state kinds).
+
+    Returns ``(bytes_read, bytes_written, atoms_written)`` — one atom file
+    per state kind the parameter carries (up to 3), not one per parameter.
+    """
+    read = written = atoms = 0
     for kind in STATE_KINDS:
         if kind not in spec.states:
             continue
@@ -67,15 +72,16 @@ def _convert_one(
             out = ucp.create_atom_memmap(
                 spec.name, kind, tuple(spec.logical_shape), spec.states[kind].dtype
             )
-            atom = union(ckpt, spec, kind, out=out)
+            atom = union(ckpt, spec, kind, out=out, engine=engine)
             if hasattr(out, "flush"):
                 out.flush()
         else:
-            atom = union(ckpt, spec, kind)
+            atom = union(ckpt, spec, kind, engine=engine)
             ucp.write_atom(spec.name, kind, np.ascontiguousarray(atom))
         read += int(np.prod(spec.runtime_shape)) * dtype.itemsize
         written += atom.nbytes
-    return read, written
+        atoms += 1
+    return read, written, atoms
 
 
 def convert_to_ucp(
@@ -83,13 +89,19 @@ def convert_to_ucp(
     out_dir: str,
     *,
     names: Sequence[str] | None = None,
-    workers: int = 4,
+    workers: int | None = None,
     streaming: bool = True,
+    engine: CheckpointEngine | None = None,
 ) -> tuple[UcpCheckpoint, ConvertStats]:
     """Convert a committed distributed checkpoint into a UCP atom checkpoint.
 
     Implements Algorithm 1: per parameter, pattern-match → Union →
-    StripPadding → Save, parallel at parameter granularity.
+    StripPadding → Save, parallel at parameter granularity.  ``engine``
+    supplies the worker pool and shard handle cache; an explicit
+    ``workers`` that disagrees with the engine's width wins (a private
+    pool is used for this call), matching ``write_distributed``.  With
+    neither given, a private pool of width 4 is used (``workers<=1`` is
+    fully serial).
     """
     if isinstance(ckpt, (str, Path)):
         ckpt = DistCheckpoint.open(ckpt)
@@ -130,17 +142,24 @@ def convert_to_ucp(
 
     stats = ConvertStats(params=len(todo))
     t0 = time.perf_counter()
-    if workers <= 1:
-        results = [_convert_one(ckpt, ucp, s, streaming) for s in todo.values()]
-    else:
-        with ThreadPoolExecutor(max_workers=workers) as pool:
-            results = list(
-                pool.map(lambda s: _convert_one(ckpt, ucp, s, streaming), todo.values())
-            )
-    for r, w in results:
+    owns_engine = False
+    if workers is not None and (engine is None or engine.workers != workers):
+        engine = CheckpointEngine(workers=max(1, workers))
+        owns_engine = True
+    elif engine is None:
+        engine = CheckpointEngine(workers=4)
+        owns_engine = True
+    try:
+        results = engine.map(
+            lambda s: _convert_one(ckpt, ucp, s, streaming, engine), todo.values()
+        )
+    finally:
+        if owns_engine:
+            engine.close()
+    for r, w, a in results:
         stats.bytes_read += r
         stats.bytes_written += w
-        stats.atoms_written += 1
+        stats.atoms_written += a
     stats.wall_time_s = time.perf_counter() - t0
     ucp.commit()
     return ucp, stats

@@ -126,11 +126,17 @@ class DistCheckpoint:
         return ckpt
 
     def write_shard(
-        self, rank: int, name: str, kind: StateKind, shard: np.ndarray
+        self, rank: int, name: str, kind: StateKind, shard: np.ndarray,
+        *, fsync: bool = True,
     ) -> int:
-        """Persist one rank's local shard; returns bytes written."""
+        """Persist one rank's local shard; returns bytes written.
+
+        ``fsync=False`` defers durability to the caller — the parallel save
+        path batches one fsync pass over all shard files before ``commit()``
+        instead of paying a synchronous flush per file.
+        """
         self.rank_dir(rank).mkdir(parents=True, exist_ok=True)
-        save_tensor(self.shard_path(rank, name, kind), shard)
+        save_tensor(self.shard_path(rank, name, kind), shard, fsync=fsync)
         return shard.nbytes
 
     def writing_ranks(self, name: str, kind: StateKind) -> list[int]:
@@ -163,28 +169,36 @@ class DistCheckpoint:
         return cls(root, manifest)
 
     def read_shard(
-        self, rank: int, name: str, kind: StateKind, *, mmap: bool = True
+        self, rank: int, name: str, kind: StateKind, *, mmap: bool = True,
+        cache=None,
     ) -> np.ndarray:
+        """Open one shard (mmap).  ``cache``: optional
+        :class:`~repro.core.engine.HandleCache` so repeated opens of the
+        same file reuse one handle."""
+        path = self.shard_path(rank, name, kind)
         spec = self.manifest.params[name]
-        return load_tensor(
-            self.shard_path(rank, name, kind),
-            dtype=spec.states[kind].dtype,
-            mmap=mmap,
-        )
+        loader = lambda: load_tensor(path, dtype=spec.states[kind].dtype, mmap=mmap)
+        if cache is not None:
+            return cache.get(path, loader)
+        return loader()
 
     def iter_param_fragments(
-        self, name: str, kind: StateKind
+        self, name: str, kind: StateKind, *, engine=None
     ) -> Iterator[tuple[int, ShardLayout, np.ndarray]]:
         """Yield ``(rank, layout, shard)`` for every persisted fragment owner.
 
         This is the read side of the paper's ``Extract`` — it enumerates the
         parameter states contained in the distributed checkpoint, one owning
-        rank at a time, without materializing anything (mmap).
+        rank at a time, without materializing anything (mmap).  ``engine``:
+        optional :class:`~repro.core.engine.CheckpointEngine` whose handle
+        cache deduplicates file opens across parameters and callers.
         """
         spec = self.manifest.params[name]
         layout = spec.layout_for(kind, self.manifest.mesh)
+        cache = engine.handles if engine is not None else None
+        mmap = engine.mmap_handles if engine is not None else True
         for rank in self.writing_ranks(name, kind):
-            yield rank, layout, self.read_shard(rank, name, kind)
+            yield rank, layout, self.read_shard(rank, name, kind, mmap=mmap, cache=cache)
 
     def total_bytes(self) -> int:
         return sum(

@@ -1,0 +1,520 @@
+"""The shared checkpoint I/O engine: index, handle cache, worker pool.
+
+Every save / convert / restore path in the repo routes its file I/O through
+a :class:`CheckpointEngine`.  The engine owns the three things the paper's
+efficiency claims (Fig. 11 zero save cost, Fig. 12 negligible
+reconfiguration cost) depend on operationally:
+
+* :class:`FragmentIndex` — a sorted interval index over the fragment
+  atom-slices of one ``(checkpoint, param, kind)``, built once and cached.
+  Region reads (``read_region_from_dist``, the direct-reshard path) query
+  the index and touch only the fragments that overlap the requested region,
+  instead of linearly scanning every writing rank and recomputing
+  ``layout_for`` per call.
+* :class:`HandleCache` — a bounded, thread-safe LRU of open mmap handles
+  keyed by file path.  A restore of N parameters × R device regions opens
+  each shard/atom file once, not once per region.
+* a bounded worker pool (:meth:`CheckpointEngine.map`) — shard writes and
+  region reads are mmap/memcpy/fsync work that releases the GIL, so both
+  directions fan out over threads; ``workers=1`` degrades to the exact
+  serial order, which keeps the parallel paths benchmarkable against
+  themselves.
+* :class:`BufferArena` — recycled staging buffers for shard slicing and
+  region assembly, because first-touch page faults on fresh allocations
+  neither scale across threads nor amortize across checkpoints.
+
+The engine is deliberately format-agnostic glue: it never interprets tensor
+contents, so ``repro.core.ops`` stays pure and the on-disk formats are
+unchanged — an engine-enabled reader and the serial reader are bit-identical.
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+import os
+import sys
+import threading
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Iterable, Sequence
+
+import numpy as np
+
+from .tensor_io import resolve_dtype
+
+__all__ = [
+    "BufferArena",
+    "CheckpointEngine",
+    "FragmentIndex",
+    "HandleCache",
+    "default_engine",
+    "default_workers",
+]
+
+
+def default_workers() -> int:
+    """Pool width when the caller does not choose: enough threads to overlap
+    fsync latency even on small hosts, bounded so huge hosts don't thrash."""
+    return min(16, max(4, (os.cpu_count() or 2) * 2))
+
+
+# ---------------------------------------------------------------------------
+# Buffer arena
+# ---------------------------------------------------------------------------
+
+
+class _ArenaBuffer(np.ndarray):
+    """Marker subclass: storage owned by a :class:`BufferArena`.
+
+    ``recycle`` walks an array's ``.base`` chain and only reclaims storage
+    that bottoms out in one of these — foreign arrays pass through silently.
+    """
+
+
+class BufferArena:
+    """Reusable staging buffers for shard slicing and region assembly.
+
+    Freshly-mmapped anonymous pages cost a kernel fault + zero per page on
+    first touch, and that fault path neither scales across threads nor
+    amortizes across checkpoints — it is the dominant cost of allocating a
+    new destination array per region/shard and it caps parallel
+    restore/save at ~1x.  The arena keeps retired buffers (warm,
+    already-faulted pages) on size-keyed free lists, so steady-state
+    staging copies run at memcpy speed and parallelize.
+
+    **Reclamation is refcount-gated.**  Consumers may hand a staging buffer
+    to something that aliases rather than copies it — jax's CPU
+    ``device_put`` zero-copies suitably-aligned arrays, and whether it does
+    so varies by size/alignment.  ``recycle`` therefore never frees
+    directly: the buffer parks on a *pending* list and its storage only
+    re-enters the free lists once the view chain built by ``alloc`` has no
+    outside referents (``sys.getrefcount``, CPython's immediate
+    refcounting).  A zero-copy jax array keeps the chain alive, so its
+    storage is reclaimed exactly when that array dies — never under it.
+
+    ``alloc(..., zero=False)`` skips clearing when the caller proves it
+    will overwrite every element (fragments fully cover the region);
+    contents of a recycled buffer are otherwise arbitrary, so callers must
+    pass ``zero=True`` unless they fully overwrite.
+    """
+
+    def __init__(self, max_bytes: int = 1 << 30):
+        self.max_bytes = int(max_bytes)
+        self._lock = threading.Lock()
+        self._free: dict[int, list[np.ndarray]] = {}
+        self._pending: list[np.ndarray] = []  # recycled, chain maybe alive
+        self._pooled_ids: set[int] = set()  # ids parked in _free or _pending
+        self._retained = 0
+        self.allocs = 0
+        self.reuses = 0
+
+    @staticmethod
+    def _bucket(nbytes: int) -> int:
+        """Round up to a power of two (min one page) so near-miss sizes
+        still reuse each other's storage; waste is bounded at 2x."""
+        size = 4096
+        while size < nbytes:
+            size <<= 1
+        return size
+
+    def _reap_locked(self) -> None:
+        """Move pending buffers whose view chains died onto the free lists."""
+        still: list[np.ndarray] = []
+        for raw in self._pending:
+            # References when the chain is dead: the _pending list, the
+            # loop variable, and getrefcount's argument binding == 3.  A
+            # live view (ours or an aliasing jax array's) adds a fourth.
+            if sys.getrefcount(raw) <= 3:
+                if self._retained + raw.nbytes <= self.max_bytes:
+                    self._free.setdefault(raw.nbytes, []).append(raw)
+                    self._retained += raw.nbytes
+                else:
+                    self._pooled_ids.discard(id(raw))  # over budget: drop
+            else:
+                still.append(raw)
+        self._pending = still
+
+    def alloc(self, shape, dtype, *, zero: bool = True) -> np.ndarray:
+        dt = resolve_dtype(dtype) if isinstance(dtype, str) else np.dtype(dtype)
+        nbytes = math.prod(int(s) for s in shape) * dt.itemsize if shape else dt.itemsize
+        bucket = self._bucket(max(nbytes, 1))
+        raw = None
+        with self._lock:
+            self._reap_locked()
+            stack = self._free.get(bucket)
+            if stack:
+                raw = stack.pop()
+                self._retained -= raw.nbytes
+                self._pooled_ids.discard(id(raw))
+                self.reuses += 1
+            else:
+                self.allocs += 1
+        if raw is None:
+            raw = np.empty(bucket, np.uint8).view(_ArenaBuffer)
+        # plain-ndarray view (consumers like np.save / jax shouldn't see the
+        # marker subclass); its .base chain still reaches the _ArenaBuffer.
+        out = (
+            raw[:nbytes]
+            .view(dt)
+            .reshape(tuple(int(s) for s in shape))
+            .view(np.ndarray)
+        )
+        if zero:
+            out[...] = np.zeros((), dt)
+        return out
+
+    def recycle(self, arr: np.ndarray | None) -> None:
+        """Offer an arena-backed array's storage back for reuse.
+
+        Storage re-enters circulation only after every view of it (the
+        caller's and any aliasing consumer's) is gone — see class docstring.
+        """
+        # Walk to the DEEPEST marker view — that is the full bucket-sized
+        # buffer allocated by alloc(); intermediate views (slice/view/
+        # reshape) inherit the subclass but only cover nbytes of it.
+        node, base = arr, None
+        while node is not None:
+            if isinstance(node, _ArenaBuffer):
+                base = node
+            node = getattr(node, "base", None)
+        if base is None:
+            return
+        with self._lock:
+            if id(base) in self._pooled_ids:  # double-recycle guard
+                return
+            self._pooled_ids.add(id(base))
+            self._pending.append(base)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._free.clear()
+            self._pending.clear()
+            self._pooled_ids.clear()
+            self._retained = 0
+
+
+# ---------------------------------------------------------------------------
+# Handle cache
+# ---------------------------------------------------------------------------
+
+
+class HandleCache:
+    """Bounded LRU of open array handles, keyed by file path.
+
+    Values are whatever the loader returns — an ``np.load(mmap_mode)`` view
+    or a fully-materialized array (see ``CheckpointEngine.mmap_handles``).
+    Bounded both by entry count and by bytes (materialized handles carry
+    their array's weight; mmap views are nearly free).  Eviction simply
+    drops the reference; the OS unmaps / the GC frees once the last slice
+    taken from the handle dies, so evicted handles stay safe to use.
+    """
+
+    def __init__(self, capacity: int = 128, max_bytes: int = 1 << 30):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.max_bytes = int(max_bytes)
+        self._lock = threading.Lock()
+        self._entries: OrderedDict[str, Any] = OrderedDict()
+        self._bytes = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @staticmethod
+    def _weight(value: Any) -> int:
+        # mmap views cost address space, not residency — count them light.
+        if isinstance(value, np.memmap) or (
+            isinstance(value, np.ndarray) and isinstance(value.base, np.memmap)
+        ):
+            return 0
+        return int(getattr(value, "nbytes", 0))
+
+    def get(self, path: str | os.PathLike, loader: Callable[[], Any]) -> Any:
+        key = str(path)
+        with self._lock:
+            if key in self._entries:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return self._entries[key]
+            self.misses += 1
+        value = loader()  # outside the lock: loads may fault pages / IO
+        with self._lock:
+            if key not in self._entries:
+                self._entries[key] = value
+                self._bytes += self._weight(value)
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity or (
+                self._bytes > self.max_bytes and len(self._entries) > 1
+            ):
+                _, old = self._entries.popitem(last=False)
+                self._bytes -= self._weight(old)
+                self.evictions += 1
+        return value
+
+    def invalidate(self, path: str | os.PathLike | None = None) -> None:
+        """Drop one handle (or all) — needed when a file is rewritten."""
+        with self._lock:
+            if path is None:
+                self._entries.clear()
+                self._bytes = 0
+            else:
+                old = self._entries.pop(str(path), None)
+                if old is not None:
+                    self._bytes -= self._weight(old)
+
+    def invalidate_prefix(self, prefix: str | os.PathLike) -> None:
+        """Drop every handle under a directory (checkpoint rewritten/GC'd)."""
+        prefix = str(prefix)
+        with self._lock:
+            for key in [k for k in self._entries if k.startswith(prefix)]:
+                self._bytes -= self._weight(self._entries.pop(key))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, path: str | os.PathLike) -> bool:
+        with self._lock:
+            return str(path) in self._entries
+
+
+# ---------------------------------------------------------------------------
+# Fragment index
+# ---------------------------------------------------------------------------
+
+
+class FragmentIndex:
+    """Sorted interval index over one ``(checkpoint, param, kind)``.
+
+    Indexes the atom-slices of every persisted fragment entry (one
+    representative writing rank per distinct fragment — replicas hold
+    byte-identical data).  ``overlapping(region)`` returns exactly the
+    entries that intersect a runtime-coordinate region, found by bisecting
+    the dim-0 intervals and exact-checking the remaining dims, instead of
+    scanning all ranks × entries.
+    """
+
+    def __init__(self, ckpt, name: str, kind) -> None:
+        manifest = ckpt.manifest
+        self.name = name
+        self.kind = kind
+        self.spec = manifest.params[name]
+        self.layout = self.spec.layout_for(kind, manifest.mesh)
+        items: list[tuple[int, int, int, Any]] = []
+        seen_frags: set[int] = set()
+        for rank in ckpt.writing_ranks(name, kind):
+            frag = self.layout.fragment_id[rank]
+            if frag in seen_frags:
+                continue
+            seen_frags.add(frag)
+            for e in self.layout.entries[rank]:
+                if e.atom_slice:
+                    a0, a1 = e.atom_slice[0]
+                else:  # 0-d tensor: a single degenerate interval
+                    a0, a1 = 0, 1
+                items.append((a0, a1, rank, e))
+        items.sort(key=lambda t: (t[0], t[1]))
+        self._items = items
+        self._starts = [t[0] for t in items]
+        # prefix max of stops → leftward scan can stop as soon as no earlier
+        # interval can still reach the query start (classic interval list).
+        self._prefix_max_stop: list[int] = []
+        m = -1
+        for _, a1, _, _ in items:
+            m = max(m, a1)
+            self._prefix_max_stop.append(m)
+
+    @property
+    def num_entries(self) -> int:
+        return len(self._items)
+
+    def overlapping(
+        self, region: Sequence[slice]
+    ) -> list[tuple[int, Any, tuple[tuple[int, int], ...]]]:
+        """Entries intersecting ``region`` (unit-step runtime slices).
+
+        Returns ``(rank, entry, overlaps)`` triples where ``overlaps`` is the
+        per-dim ``(lo, hi)`` intersection in atom coordinates.  Distinct
+        fragments are pairwise disjoint, so every returned entry contributes
+        unique elements of the region.
+        """
+        region = tuple(region)
+        if region:
+            q_start, q_stop = region[0].start, region[0].stop
+        else:
+            q_start, q_stop = 0, 1
+        out: list[tuple[int, Any, tuple[tuple[int, int], ...]]] = []
+        j = bisect.bisect_left(self._starts, q_stop) - 1  # start0 < q_stop
+        while j >= 0 and self._prefix_max_stop[j] > q_start:
+            a0, a1, rank, e = self._items[j]
+            j -= 1
+            if a1 <= q_start:
+                continue
+            ovs: list[tuple[int, int]] = []
+            ok = True
+            for (f0, f1), r in zip(e.atom_slice, region):
+                lo, hi = max(f0, r.start), min(f1, r.stop)
+                if hi <= lo:
+                    ok = False
+                    break
+                ovs.append((lo, hi))
+            if ok:
+                out.append((rank, e, tuple(ovs)))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class CheckpointEngine:
+    """Shared I/O engine: fragment indexes + handle cache + worker pool.
+
+    One engine per process (``default_engine()``) is normally enough — the
+    caches are keyed by checkpoint root so several checkpoints can share it.
+    Benchmarks construct private engines to compare ``workers=1`` against
+    ``workers>=4`` under otherwise identical caching.
+    """
+
+    def __init__(
+        self,
+        *,
+        workers: int | None = None,
+        handle_cache_size: int = 1024,
+        handle_cache_bytes: int = 1 << 30,
+        arena_max_bytes: int = 1 << 30,
+        mmap_handles: bool | None = None,
+        use_arena: bool | None = None,
+    ) -> None:
+        """``workers=1`` is the reference serial profile — lazy mmap
+        handles, fresh ``np.zeros`` staging, no batching: exactly the
+        pre-engine code path, kept so the parallel engine stays
+        benchmarkable against it.  ``workers>1`` enables the engine
+        machinery: ``mmap_handles=False`` materializes each shard/atom file
+        into the handle cache on first touch (one sequential read per file,
+        after which every region copy runs at memory speed and
+        parallelizes; lazy mmap views instead re-fault pages through the
+        filesystem on every access, and those faults serialize across
+        threads), and ``use_arena=True`` recycles staging buffers (see
+        :class:`BufferArena`).  Both flags can also be forced explicitly."""
+        self.workers = default_workers() if workers is None else int(workers)
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        serial = self.workers == 1
+        self.mmap_handles = serial if mmap_handles is None else bool(mmap_handles)
+        self.use_arena = (not serial) if use_arena is None else bool(use_arena)
+        self.handles = HandleCache(handle_cache_size, handle_cache_bytes)
+        self.arena = BufferArena(arena_max_bytes)
+        self._indexes: dict[tuple[str, str, str], FragmentIndex] = {}
+        self._index_lock = threading.Lock()
+        self._pool: ThreadPoolExecutor | None = None
+        self._pool_lock = threading.Lock()
+
+    # ----------------------------------------------------------------- arena
+    def alloc(self, shape, dtype, *, zero: bool = True) -> np.ndarray:
+        """Staging buffer: arena-backed (see :class:`BufferArena`), or a
+        plain fresh ``np.zeros`` under the serial reference profile."""
+        if not self.use_arena:
+            dt = resolve_dtype(dtype) if isinstance(dtype, str) else np.dtype(dtype)
+            return np.zeros(tuple(int(s) for s in shape), dt)
+        return self.arena.alloc(shape, dtype, zero=zero)
+
+    def recycle(self, arr: np.ndarray | None) -> None:
+        if self.use_arena:
+            self.arena.recycle(arr)
+
+    # ------------------------------------------------------------------ pool
+    def _get_pool(self) -> ThreadPoolExecutor:
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.workers, thread_name_prefix="ckpt-io"
+                )
+            return self._pool
+
+    def map(self, fn: Callable[[Any], Any], items: Iterable[Any]) -> list[Any]:
+        """Run ``fn`` over ``items``; ordered results.
+
+        ``workers == 1`` executes inline in iteration order — the exact
+        serial code path, not a one-thread pool — so serial-vs-parallel
+        comparisons measure concurrency and nothing else.
+        """
+        items = list(items)
+        if self.workers == 1 or len(items) <= 1:
+            return [fn(x) for x in items]
+        return list(self._get_pool().map(fn, items))
+
+    def close(self) -> None:
+        with self._pool_lock:
+            if self._pool is not None:
+                self._pool.shutdown(wait=True)
+                self._pool = None
+        self.handles.invalidate()
+        self.arena.clear()
+        with self._index_lock:
+            self._indexes.clear()
+
+    def __enter__(self) -> "CheckpointEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ----------------------------------------------------------------- index
+    def index_for(self, ckpt, name: str, kind) -> FragmentIndex:
+        """The (cached) fragment index of one ``(checkpoint, param, kind)``."""
+        key = (str(ckpt.root), name, getattr(kind, "value", str(kind)))
+        idx = self._indexes.get(key)
+        if idx is not None:
+            return idx
+        idx = FragmentIndex(ckpt, name, kind)
+        with self._index_lock:
+            return self._indexes.setdefault(key, idx)
+
+    # ----------------------------------------------------------------- reads
+    def read_shard(self, ckpt, rank: int, name: str, kind) -> np.ndarray:
+        """Handle-cached read of one distributed shard file."""
+        path = ckpt.shard_path(rank, name, kind)
+        return self.handles.get(
+            path, lambda: ckpt.read_shard(rank, name, kind, mmap=self.mmap_handles)
+        )
+
+    def read_atom(self, ucp, name: str, kind) -> np.ndarray:
+        """Handle-cached read of one UCP atom file."""
+        path = ucp.atom_path(name, kind)
+        return self.handles.get(
+            path, lambda: ucp.read_atom(name, kind, mmap=self.mmap_handles)
+        )
+
+    def invalidate(self, root: str | os.PathLike | None = None) -> None:
+        """Forget cached state (all of it, or one checkpoint root's indexes).
+
+        Call after rewriting files in place — e.g. a crashed save retried
+        into the same directory.
+        """
+        if root is None:
+            self.handles.invalidate()
+            with self._index_lock:
+                self._indexes.clear()
+            return
+        root = str(root)
+        self.handles.invalidate_prefix(root)
+        with self._index_lock:
+            for key in [k for k in self._indexes if k[0] == root]:
+                del self._indexes[key]
+
+
+_default_engine: CheckpointEngine | None = None
+_default_lock = threading.Lock()
+
+
+def default_engine() -> CheckpointEngine:
+    """The process-wide shared engine (lazily created)."""
+    global _default_engine
+    with _default_lock:
+        if _default_engine is None:
+            _default_engine = CheckpointEngine()
+        return _default_engine

@@ -469,9 +469,23 @@ def compute_layout(
 # ---------------------------------------------------------------------------
 
 
-def slice_shard(global_arr: np.ndarray, layout: ShardLayout, rank: int) -> np.ndarray:
-    """Materialize rank's local shard (with zero padding) from a global array."""
-    local = np.zeros(layout.local_shape, dtype=global_arr.dtype)
+def slice_shard(
+    global_arr: np.ndarray, layout: ShardLayout, rank: int, *, alloc=None
+) -> np.ndarray:
+    """Materialize rank's local shard (with zero padding) from a global array.
+
+    ``alloc``: optional ``(shape, dtype, zero=...) -> ndarray`` allocator
+    (the engine's buffer arena); zeroing is skipped when the rank's entries
+    cover the whole local shard (no alignment padding to blank).
+    """
+    if alloc is None:
+        local = np.zeros(layout.local_shape, dtype=global_arr.dtype)
+    else:
+        local = alloc(
+            layout.local_shape,
+            global_arr.dtype,
+            zero=layout.covered_fraction(rank) < 1.0,
+        )
     for e in layout.entries[rank]:
         local[e.shard_index()] = global_arr[e.atom_index()]
     return local

@@ -110,6 +110,7 @@ def union(
     kind: StateKind,
     *,
     out: np.ndarray | None = None,
+    engine=None,
 ) -> np.ndarray:
     """Consolidate one parameter state into its (logical) atom.
 
@@ -125,6 +126,10 @@ def union(
     shape.  When given and the parameter needs no padding-strip or
     averaging, fragments stream directly into it — constant working memory
     regardless of parameter size.
+
+    ``engine``: optional :class:`~repro.core.engine.CheckpointEngine` whose
+    handle cache deduplicates shard-file opens across parameters (ZeRO
+    layouts open the same rank files for every parameter).
     """
     mesh = ckpt.manifest.mesh
     layout = spec.layout_for(kind, mesh)
@@ -142,12 +147,12 @@ def union(
 
     if spec.average:
         # Every rank holds divergent data → read all owners, then average.
-        for rank, _, shard in ckpt.iter_param_fragments(spec.name, kind):
+        for rank, _, shard in ckpt.iter_param_fragments(spec.name, kind, engine=engine):
             for e in layout.entries[rank]:
                 target[e.atom_index()] = shard[e.shard_index()]
         atom = strip_padding(target, spec)
     else:
-        for rank, _, shard in ckpt.iter_param_fragments(spec.name, kind):
+        for rank, _, shard in ckpt.iter_param_fragments(spec.name, kind, engine=engine):
             for e in layout.entries[rank]:
                 target[e.atom_index()] = shard[e.shard_index()]
         atom = target if direct else strip_padding(target, spec)
@@ -272,6 +277,8 @@ def read_runtime_region(
     spec: ParamSpec,
     region: tuple[slice, ...],
     dtype,
+    *,
+    alloc=None,
 ) -> np.ndarray:
     """Read an arbitrary runtime-coordinate region from a logical atom.
 
@@ -279,23 +286,36 @@ def read_runtime_region(
     restore: JAX hands us each device's index into the *runtime* array; we
     serve it from the atom (mmap slice), zero-filling alignment padding and
     broadcasting the replica dim of ``params_to_average`` parameters.
+
+    ``alloc``: optional ``(shape, dtype, zero=...) -> ndarray`` allocator
+    (the engine's :class:`~repro.core.engine.BufferArena`); ``zero=False``
+    is requested when the atom covers the whole region, so recycled staging
+    buffers skip the clear.
     """
     rt = spec.runtime_shape
     region = tuple(
         slice(*r.indices(s)) for r, s in zip(region, rt)
     )
     shape = tuple(r.stop - r.start for r in region)
-    out = np.zeros(shape, dtype=resolve_dtype(dtype))
+    dt = resolve_dtype(dtype)
+    if alloc is None:
+        alloc = lambda s, d, zero=True: np.zeros(s, dtype=d)
     body = region[1:] if spec.average else region
     reads: list[slice] = []
     dests: list[slice] = []
+    full = True
     for r, lim in zip(body, spec.logical_shape):
         hi = min(r.stop, lim)
         if hi <= r.start:
-            return out  # region entirely inside padding
+            return alloc(shape, dt, zero=True)  # region entirely inside padding
+        if hi < r.stop:
+            full = False
         reads.append(slice(r.start, hi))
         dests.append(slice(0, hi - r.start))
-    piece = np.asarray(atom[tuple(reads)], dtype=out.dtype)
+    out = alloc(shape, dt, zero=not full)
+    piece = atom[tuple(reads)]
+    # direct assignment: one copy into the output, casting in place — no
+    # intermediate astype materialization.
     if spec.average:
         out[(slice(None), *dests)] = piece[None]
     else:

@@ -168,7 +168,19 @@ class ParamSpec:
         return self.runtime_shape[0] if self.average else 1
 
     def layout_for(self, kind: StateKind, mesh: MeshSpec) -> ShardLayout:
-        return self.states[kind].layout(self.runtime_shape, mesh)
+        # Memoized: every save/convert/restore path asks for the same
+        # (kind, mesh) layouts over and over (once per region read in the
+        # worst case) and compute_layout is pure — cache per instance.
+        cache: dict = self.__dict__.get("_layout_cache")  # type: ignore[assignment]
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_layout_cache", cache)
+        key = (kind, mesh)
+        layout = cache.get(key)
+        if layout is None:
+            layout = self.states[kind].layout(self.runtime_shape, mesh)
+            cache[key] = layout
+        return layout
 
     def pattern_for(self, kind: StateKind, mesh: MeshSpec) -> Pattern:
         return derive_pattern(self.layout_for(kind, mesh), average=self.average)

@@ -30,7 +30,14 @@ try:  # ml_dtypes ships with jax; core stays importable without it.
 except ImportError:  # pragma: no cover
     _EXTENDED = {}
 
-__all__ = ["resolve_dtype", "dtype_name", "save_tensor", "load_tensor", "open_memmap"]
+__all__ = [
+    "resolve_dtype",
+    "dtype_name",
+    "save_tensor",
+    "load_tensor",
+    "open_memmap",
+    "fsync_path",
+]
 
 
 def resolve_dtype(name: str) -> np.dtype:
@@ -47,15 +54,33 @@ def dtype_name(dtype) -> str:
     return dt.name
 
 
-def save_tensor(path: str | os.PathLike, arr: np.ndarray) -> None:
-    """Atomically write an array (tmp + rename) so readers never see torn files."""
+def save_tensor(path: str | os.PathLike, arr: np.ndarray, *, fsync: bool = True) -> None:
+    """Atomically write an array (tmp + rename) so readers never see torn files.
+
+    ``fsync=False`` defers durability to the caller (``fsync_path`` later,
+    before the checkpoint COMMIT marker) — the parallel save path batches
+    fsyncs this way instead of paying one synchronous flush per shard file.
+    """
     path = Path(path)
     tmp = path.with_suffix(path.suffix + ".tmp")
     with open(tmp, "wb") as f:
-        np.save(f, np.ascontiguousarray(arr))
+        # No ascontiguousarray: np.save streams non-contiguous arrays to a
+        # real file in bounded chunks (ndarray.tofile), so strided shard
+        # views are written without materializing a full staging copy.
+        np.save(f, arr)
         f.flush()
-        os.fsync(f.fileno())
+        if fsync:
+            os.fsync(f.fileno())
     os.replace(tmp, path)
+
+
+def fsync_path(path: str | os.PathLike) -> None:
+    """Flush one already-written file to stable storage (batched-fsync leg)."""
+    fd = os.open(str(path), os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def load_tensor(
