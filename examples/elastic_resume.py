@@ -1,12 +1,22 @@
-"""Elastic resume end-to-end: the paper's Fig. 1 scenario.
+"""Elastic resume end-to-end: the paper's Fig. 1 scenario, plus the
+beyond-paper hot tier.
 
-A training job runs on 8 (simulated) chips as DP=4 × TP=2.  Two chips
-"fail"; the elastic planner proposes a 4-chip mesh, and the job resumes
-from the last distributed checkpoint THROUGH UCP — different mesh,
-different parallelism, same loss curve, same data order.
+Phases 1–2: a training job runs on 8 (simulated) chips as DP=4 × TP=2.
+Two chips "fail"; the elastic planner proposes a 4-chip mesh, and the job
+resumes from the last distributed checkpoint THROUGH UCP — different
+mesh, different parallelism, same loss curve, same data order.  Each of
+these phases is a separate launcher process (device counts are fixed at
+jax init), exactly like a restarted job on a shrunken cluster.
 
-Each phase is a separate launcher process (device counts are fixed at jax
-init), exactly like a restarted job on a shrunken cluster::
+Phase 3: the *hot* path — the process survives a peer-rank loss, so
+recovery never needs the restart at all.  Training checkpoints into the
+in-memory tier (peer-replicated snapshots every few steps), ranks "fail",
+and `hot_recover` restores from the surviving replicas in memory:
+HOT_DIRECT onto the same layout, HOT_RESHARD onto a different one — both
+without reading a single checkpoint byte from disk, and bit-identical to
+what the disk path would have produced.
+
+::
 
     PYTHONPATH=src python examples/elastic_resume.py
 """
@@ -38,6 +48,64 @@ def launch(ndev: int, mesh: str, steps: int, ckpt: str) -> list[dict]:
     return [json.loads(l) for l in out.stdout.splitlines() if l.startswith("{")]
 
 
+def hot_tier_demo() -> None:
+    """Phase 3: in-process rank loss, recovered from in-memory replicas."""
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro.configs import ParallelismConfig, get_config, reduced
+    from repro.core.layout import MeshSpec
+    from repro.ckpt.manager import CheckpointManager
+    from repro.dist.sharding import make_plan, vocab_multiple
+    from repro.elastic.resume import ElasticEvent, hot_recover
+    from repro.models import build_model
+    from repro.train.optimizer import init_state
+
+    cfg = reduced(get_config("smollm-360m"))
+    parallel = ParallelismConfig()
+    mesh = MeshSpec.from_dict({"data": 2, "model": 2})
+    lm = build_model(cfg, vocab_multiple=vocab_multiple(parallel, mesh))
+    plan = make_plan(cfg, lm.registry, parallel, mesh)
+    state = init_state(lm.init(jax.random.PRNGKey(0)))
+    jmesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    with tempfile.TemporaryDirectory() as tmp:
+        mgr = CheckpointManager(
+            f"{tmp}/job", plan,
+            hot_interval=1, save_interval=4,  # hot every step, disk every 4th
+            hot_replication=1, async_save=False,
+        )
+        for step in (1, 2, 3):  # three hot snapshots, nothing on disk yet
+            mgr.save(state, step)
+        mgr.wait()
+        print(f"  hot ring: {[s.step for s in mgr.hot.snapshots()]}, "
+              f"disk steps: {mgr.steps()} (drain due at step 4)")
+
+        print("\n*** simulated failure: ranks {0, 3} lose their host memory ***")
+        event = ElasticEvent(healthy_devices=2, reason="failure",
+                             failed_ranks=(0, 3))
+        restored, info = hot_recover(mgr, event, jmesh, verify=True)
+        print(f"  recovered @ step {info.step} mode={info.mode.value} "
+              f"({info.reason}) in {info.wall_time_s:.3f}s — zero disk reads")
+
+        # reshard onto the shrunken 2-chip layout, still from memory
+        mesh2 = MeshSpec.from_dict({"data": 2, "model": 1})
+        lm2 = build_model(cfg, vocab_multiple=vocab_multiple(parallel, mesh2))
+        plan2 = make_plan(cfg, lm2.registry, parallel, mesh2)
+        restored2, info2 = hot_recover(mgr, event, jmesh, target_plan=plan2)
+        print(f"  resharded @ step {info2.step} mode={info2.mode.value} "
+              f"({info2.reason})")
+
+        assert info.mode.value == "hot_direct" and info2.mode.value == "hot_reshard"
+        for a, b in zip(jax.tree.leaves(restored.params),
+                        jax.tree.leaves(state.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        print("  restored state is bit-identical to the checkpointed state")
+        mgr.close()
+
+
 def main() -> None:
     with tempfile.TemporaryDirectory() as tmp:
         ckpt = f"{tmp}/job"
@@ -64,6 +132,10 @@ def main() -> None:
             elif r.get("event") == "step":
                 print(f"  step {r['step']:3d} loss {r['loss']:.4f}")
         print("\ntraining continued seamlessly on the shrunken cluster.")
+
+        print("\nphase 3: hot-tier recovery — the process survives, so the "
+              "surviving ranks' MEMORY is the checkpoint")
+        hot_tier_demo()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Compare fresh benchmark rows against the committed baseline.
+
+Usage::
+
+    python scripts/bench_compare.py NEW.json BASELINE.json [--tolerance 8.0]
+
+Fails (exit 1) when a row present in both files regressed by more than
+``tolerance``× in ``us_per_call``, or when the fresh run is missing a row
+family the baseline has.  The tolerance is deliberately loose: CI hosts
+and laptops differ wildly in absolute disk/memory bandwidth, so this is a
+smoke check for order-of-magnitude regressions (an accidentally-serialized
+pool, a cache that stopped caching), not a microbenchmark gate.
+
+Relative sanity checks ride along where the rows encode one — hot-tier
+rows must stay faster than the matching disk rows at the same size, which
+holds on any host because both run on the same hardware in the same
+process.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, float]:
+    with open(path) as f:
+        doc = json.load(f)
+    return {
+        r["name"]: float(r["us_per_call"])
+        for r in doc["rows"]
+        if r.get("us_per_call") is not None
+    }
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("new")
+    p.add_argument("baseline")
+    p.add_argument(
+        "--tolerance", type=float, default=8.0,
+        help="max allowed slowdown factor vs the baseline (default 8x)",
+    )
+    args = p.parse_args()
+
+    new = load_rows(args.new)
+    base = load_rows(args.baseline)
+    failures: list[str] = []
+
+    common = sorted(set(new) & set(base))
+    if not common:
+        failures.append(
+            f"no comparable rows between {args.new} ({sorted(new)[:5]}...) "
+            f"and {args.baseline}"
+        )
+    for name in common:
+        ratio = new[name] / base[name] if base[name] else float("inf")
+        status = "OK"
+        if ratio > args.tolerance:
+            status = f"REGRESSED >{args.tolerance}x"
+            failures.append(f"{name}: {ratio:.2f}x slower than baseline")
+        print(f"{name}: {new[name]:.0f}us vs baseline {base[name]:.0f}us "
+              f"({ratio:.2f}x) {status}")
+
+    # hot-vs-disk ordering: same-host, same-process — must hold anywhere.
+    for size in ("small", "medium", "large"):
+        pairs = [
+            (f"hot_capture_{size}", f"disk_save_{size}"),
+            (f"hot_restore_direct_{size}", f"disk_restore_direct_{size}"),
+            (f"hot_restore_reshard_{size}", f"disk_restore_reshard_{size}"),
+            (f"hot_recover_failed_{size}", f"disk_restore_reshard_{size}"),
+        ]
+        for hot, disk in pairs:
+            if hot in new and disk in new and new[hot] >= new[disk]:
+                failures.append(
+                    f"{hot} ({new[hot]:.0f}us) not faster than {disk} "
+                    f"({new[disk]:.0f}us)"
+                )
+
+    if failures:
+        print("\nbench-compare FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"bench-compare: {len(common)} rows within {args.tolerance}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,17 @@
 from .engine import CheckpointEngine, FragmentIndex, HandleCache, default_engine
 from .manager import CheckpointManager, RestoreInfo
-from .restore import read_region_from_dist, state_from_dist, state_from_ucp
+from .restore import (
+    read_region_from_dist,
+    read_region_from_source,
+    state_from_dist,
+    state_from_source,
+    state_from_ucp,
+)
 from .saver import AsyncSaver, SaveResult, snapshot_state, write_distributed
 __all__ = [
     "CheckpointEngine", "FragmentIndex", "HandleCache", "default_engine",
     "CheckpointManager", "RestoreInfo", "read_region_from_dist",
-    "state_from_dist", "state_from_ucp", "AsyncSaver", "SaveResult",
+    "read_region_from_source", "state_from_dist", "state_from_source",
+    "state_from_ucp", "AsyncSaver", "SaveResult",
     "snapshot_state", "write_distributed",
 ]

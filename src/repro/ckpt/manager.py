@@ -3,12 +3,20 @@
 Responsibilities:
 
 * periodic saves (sync or async/overlapped), atomic commit, keep-last-k GC;
+* the hot in-memory tier (``hot_interval``): per-``hot_interval``-step
+  peer-replicated host snapshots with every Nth promoted to disk in the
+  background (``disk_interval``), see :mod:`repro.hot`;
 * discovery that skips uncommitted (crashed) checkpoint directories;
-* resume that implements the paper's *lazy* conversion: DIRECT per-rank
-  reads when the Target layout equals the Source, one-time conversion to a
-  cached UCP atom directory (``<step dir>.ucp``) when it does not;
+* tiered resume (``restore_latest``): HOT_DIRECT → HOT_RESHARD from
+  surviving in-memory replicas, falling through to the disk tiers;
+* disk resume that implements the paper's *lazy* conversion: DIRECT
+  per-rank reads when the Target layout equals the Source, one-time
+  conversion to a cached UCP atom directory (``<step dir>.ucp``) when it
+  does not;
 * the UCP cache is shared: five different Targets resuming from the same
-  Source convert once (hub-format property, paper §3.1).
+  Source convert once (hub-format property, paper §3.1);
+* opt-in integrity verification (``verify=True``) against the content
+  digests recorded at save/capture/convert time.
 """
 
 from __future__ import annotations
@@ -26,6 +34,7 @@ from repro.core.convert import ConvertStats, convert_to_ucp
 from repro.core.dist_ckpt import DistCheckpoint
 from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.plan import ResumeMode, TargetSpec, plan_resume
+from repro.core.tensor_io import IntegrityError
 from repro.dist.sharding import ShardingPlan
 from repro.train.optimizer import TrainState
 from .restore import RestoreStats, state_from_dist, state_from_ucp
@@ -53,6 +62,11 @@ class CheckpointManager:
         *,
         keep_last: int = 3,
         save_interval: int = 50,
+        disk_interval: int | None = None,
+        hot_interval: int | None = None,
+        hot_replication: int = 1,
+        hot_max_snapshots: int = 4,
+        hot_max_bytes: int = 2 << 30,
         async_save: bool = True,
         max_pending_saves: int = 2,
         io_workers: int | None = None,
@@ -62,12 +76,23 @@ class CheckpointManager:
         save, convert and restore paths (None = process default;
         1 = fully serial).  ``max_pending_saves`` bounds how many async
         save snapshots may be in flight before ``save()`` applies
-        backpressure."""
+        backpressure.
+
+        Hot-tier policy: ``hot_interval`` (None = disabled) captures a
+        peer-replicated in-memory snapshot every N steps; every
+        ``disk_interval // hot_interval``-th snapshot is promoted to a
+        durable disk checkpoint in the background (``disk_interval``
+        defaults to ``save_interval``, which stays the disk cadence when
+        the hot tier is off).  ``hot_replication`` extra copies per
+        fragment, ``hot_max_snapshots`` / ``hot_max_bytes`` bound the ring.
+        """
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.plan = plan
         self.keep_last = keep_last
         self.save_interval = save_interval
+        self.disk_interval = disk_interval if disk_interval is not None else save_interval
+        self.hot_interval = hot_interval
         self.config_fingerprint = dict(config_fingerprint or {})
         self.engine = (
             CheckpointEngine(workers=io_workers)
@@ -75,18 +100,54 @@ class CheckpointManager:
             else default_engine()
         )
         self._async = AsyncSaver(max_pending=max_pending_saves) if async_save else None
+        self.hot = None
+        self._drainer = None
+        if hot_interval is not None:
+            if hot_interval < 1:
+                raise ValueError(f"hot_interval must be >= 1, got {hot_interval}")
+            from repro.hot import HotDrainer, HotTier
+
+            self.hot = HotTier(
+                replication=hot_replication,
+                max_snapshots=hot_max_snapshots,
+                max_bytes=hot_max_bytes,
+                engine=self.engine,
+            )
+            self._drainer = HotDrainer(
+                every=max(1, self.disk_interval // hot_interval),
+                engine=self.engine,
+                max_pending=max_pending_saves,
+            )
 
     # ------------------------------------------------------------------ save
     def step_dir(self, step: int) -> Path:
         return self.root / f"step_{step:08d}"
 
     def should_save(self, step: int) -> bool:
-        return step > 0 and step % self.save_interval == 0
+        if step <= 0:
+            return False
+        if self.hot is not None:
+            # hot cadence subsumes the disk cadence: every Nth snapshot is
+            # promoted to disk by the background drainer.
+            return step % self.hot_interval == 0
+        return step % self.save_interval == 0
 
     def save(
         self, state: TrainState, step: int, *, scalars: Mapping[str, Any] | None = None,
         block: bool = False,
     ) -> None:
+        if self.hot is not None and step % self.hot_interval == 0:
+            snap = snapshot_state(state)
+            hs, _ = self.hot.capture(
+                snap, self.plan, step,
+                scalars=dict(scalars or {}),
+                config_fingerprint=self.config_fingerprint,
+            )
+            self._drainer.maybe_drain(hs, self.step_dir(step))
+            if block:
+                self._drainer.wait()
+            self.gc()
+            return
         kw = dict(
             scalars=dict(scalars or {}),
             config_fingerprint=self.config_fingerprint,
@@ -100,15 +161,22 @@ class CheckpointManager:
         self.gc()
 
     def wait(self) -> list[SaveResult]:
-        if self._async is None:
-            return []
-        res = self._async.wait()
-        self.gc()
+        res: list[SaveResult] = []
+        if self._drainer is not None:
+            res.extend(self._drainer.wait())
+        if self._async is not None:
+            res.extend(self._async.wait())
+        if res or self._async is not None or self._drainer is not None:
+            self.gc()
         return res
 
     def close(self) -> None:
+        if self._drainer is not None:
+            self._drainer.close()
         if self._async is not None:
             self._async.close()
+        if self.hot is not None:
+            self.hot.clear()
 
     # ----------------------------------------------------------------- lookup
     def steps(self) -> list[int]:
@@ -152,12 +220,16 @@ class CheckpointManager:
         step: int | None = None,
         target_plan: ShardingPlan | None = None,
         convert_workers: int | None = None,
+        verify: bool = False,
     ) -> tuple[TrainState, RestoreInfo] | None:
-        """Resume onto ``jmesh`` under ``target_plan`` (default: own plan).
+        """Resume onto ``jmesh`` under ``target_plan`` (default: own plan)
+        from the *disk* tiers (DIRECT / VIA_UCP).
 
         ``convert_workers`` overrides the conversion pool width for this
-        call (None = the manager's own engine/pool).  Returns None when no
-        committed checkpoint exists (fresh start).
+        call (None = the manager's own engine/pool).  ``verify=True``
+        checks the checkpoint's content digests before building state and
+        raises :class:`~repro.core.tensor_io.IntegrityError` on mismatch.
+        Returns None when no committed checkpoint exists (fresh start).
         """
         plan = target_plan or self.plan
         step = step if step is not None else self.latest_step()
@@ -165,6 +237,13 @@ class CheckpointManager:
             return None
         t0 = time.perf_counter()
         ckpt = DistCheckpoint.open(self.step_dir(step))
+        if verify:
+            problems = ckpt.validate()
+            if problems:
+                raise IntegrityError(
+                    f"checkpoint step {step} failed verification: "
+                    + "; ".join(problems[:5])
+                )
         target = TargetSpec(plan.mesh, plan.param_specs)
         rp = plan_resume(ckpt.manifest, target)
         stats = RestoreStats()
@@ -180,6 +259,15 @@ class CheckpointManager:
                 ucp, cstats = convert_to_ucp(
                     ckpt, str(ucp_dir), workers=convert_workers, engine=self.engine
                 )  # explicit convert_workers wins over the manager engine
+            if verify and cstats is None:
+                # cached UCP directory: its atoms were not just produced
+                # from the (already-verified) shards — check their digests.
+                problems = ucp.validate()
+                if problems:
+                    raise IntegrityError(
+                        f"cached UCP for step {step} failed verification: "
+                        + "; ".join(problems[:5])
+                    )
             state = state_from_ucp(ucp, plan, jmesh, stats, engine=self.engine)
         info = RestoreInfo(
             step=step,
@@ -191,3 +279,47 @@ class CheckpointManager:
             wall_time_s=time.perf_counter() - t0,
         )
         return state, info
+
+    def restore_latest(
+        self,
+        jmesh: jax.sharding.Mesh,
+        *,
+        target_plan: ShardingPlan | None = None,
+        convert_workers: int | None = None,
+        verify: bool = False,
+    ) -> tuple[TrainState, RestoreInfo] | None:
+        """Tiered resume: walk HOT_DIRECT → HOT_RESHARD → DIRECT → VIA_UCP.
+
+        Prefers the newest surviving in-memory snapshot when it is at
+        least as fresh as the best committed disk checkpoint and its
+        replicas still cover the full state (after any ``hot.fail_ranks``
+        events); otherwise falls through to :meth:`restore`.  With the hot
+        tier disabled this *is* :meth:`restore`.
+        """
+        plan = target_plan or self.plan
+        if self.hot is not None:
+            from repro.hot import plan_hot_recovery, state_from_hot
+
+            target = TargetSpec(plan.mesh, plan.param_specs)
+            hp = plan_hot_recovery(self.hot, target, min_step=self.latest_step())
+            if hp is not None:
+                t0 = time.perf_counter()
+                stats = RestoreStats()
+                state = state_from_hot(
+                    hp.snapshot, plan, jmesh, stats,
+                    engine=self.engine, verify=verify,
+                )
+                info = RestoreInfo(
+                    step=hp.step,
+                    mode=hp.mode,
+                    reason=hp.reason,
+                    scalars=dict(hp.snapshot.manifest.scalars),
+                    convert_stats=None,
+                    restore_stats=stats,
+                    wall_time_s=time.perf_counter() - t0,
+                )
+                return state, info
+        return self.restore(
+            jmesh, target_plan=target_plan,
+            convert_workers=convert_workers, verify=verify,
+        )

@@ -11,12 +11,15 @@ exactly those bytes —
   (``GenUcpMetadata`` + ``Load``), with padding zero-filled, the replica
   dim broadcast, and dtype cast to the Target precision policy.
 
-``read_region_from_dist`` additionally supports serving an arbitrary
-region from a *distributed* checkpoint by unioning overlapping fragments
-on the fly — this powers the beyond-paper "direct reshard" fast path
-benchmarked in ``benchmarks/bench_checkpointing.py`` (``bench_transform_load``,
-skipping atom materialization when the Source can stream straight into the
-Target).
+``read_region_from_source`` additionally supports serving an arbitrary
+region from any *fragment source* by unioning overlapping fragments on the
+fly — a distributed checkpoint on disk (the beyond-paper "direct reshard"
+fast path benchmarked in ``benchmarks/bench_checkpointing.py``, skipping
+atom materialization when the Source can stream straight into the Target)
+or an in-memory hot snapshot (``repro.hot``: the ``HOT_RESHARD`` recovery
+tier unions surviving peer replicas without touching disk).  The two share
+one code path because the engine's index and fragment reads are generic
+over :class:`~repro.core.engine.FragmentSource`.
 
 All file I/O routes through a :class:`~repro.core.engine.CheckpointEngine`:
 fragment lookups hit the engine's sorted interval index (built once per
@@ -35,7 +38,6 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.core.atoms import UcpCheckpoint
-from repro.core.dist_ckpt import DistCheckpoint
 from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.ops import read_runtime_region
 from repro.core.patterns import StateKind
@@ -44,7 +46,14 @@ from repro.core.tensor_io import resolve_dtype
 from repro.dist.sharding import ShardingPlan
 from repro.train.optimizer import TrainState
 
-__all__ = ["read_region_from_dist", "state_from_ucp", "state_from_dist", "RestoreStats"]
+__all__ = [
+    "read_region_from_source",
+    "read_region_from_dist",
+    "state_from_source",
+    "state_from_ucp",
+    "state_from_dist",
+    "RestoreStats",
+]
 
 
 def _canon_region(
@@ -54,8 +63,8 @@ def _canon_region(
     return tuple(slice(*r.indices(s)) for r, s in zip(region, shape))
 
 
-def read_region_from_dist(
-    ckpt: DistCheckpoint,
+def read_region_from_source(
+    source,
     name: str,
     kind: StateKind,
     region: tuple[slice, ...],
@@ -65,17 +74,20 @@ def read_region_from_dist(
 ) -> np.ndarray:
     """Serve a runtime-coordinate region by unioning source fragments.
 
-    When Source and Target layouts are identical, each Target device's
-    region coincides with exactly one fragment → one file read (DIRECT).
+    ``source`` is any :class:`~repro.core.engine.FragmentSource`: a
+    :class:`DistCheckpoint` (fragments are shard files) or a hot snapshot
+    (fragments are surviving in-memory replicas).  When Source and Target
+    layouts are identical, each Target device's region coincides with
+    exactly one fragment → one fragment read (DIRECT / HOT_DIRECT).
     Otherwise this is on-the-fly resharding (no atoms materialized).
 
     The engine's :class:`~repro.core.engine.FragmentIndex` pre-selects the
     fragments overlapping the region (distinct fragments are pairwise
     disjoint, so every hit contributes unique elements), and its handle
-    cache keeps each shard file open across regions and parameters.
+    cache keeps each disk-backed fragment open across regions and params.
     """
     engine = engine or default_engine()
-    idx = engine.index_for(ckpt, name, kind)
+    idx = engine.index_for(source, name, kind)
     region = _canon_region(region, idx.spec.runtime_shape)
     shape = tuple(r.stop - r.start for r in region)
     hits = idx.overlapping(region)
@@ -86,7 +98,7 @@ def read_region_from_dist(
     covered = sum(math.prod(hi - lo for lo, hi in ovs) for _, _, ovs in hits)
     out = engine.alloc(shape, resolve_dtype(dtype), zero=covered < total)
     for rank, e, ovs in hits:
-        shard = engine.read_shard(ckpt, rank, name, kind)
+        shard = engine.read_fragment(source, rank, name, kind)
         src_idx = tuple(
             slice(s0 + (lo - a0), s0 + (hi - a0))
             for (a0, _), (s0, _), (lo, hi) in zip(e.atom_slice, e.shard_slice, ovs)
@@ -98,6 +110,11 @@ def read_region_from_dist(
         # place when dtypes differ — never an intermediate materialization.
         out[dst_idx] = shard[src_idx]
     return out
+
+
+# Historical name (the path predates the fragment-source generalization);
+# disk checkpoints are just one kind of source.
+read_region_from_dist = read_region_from_source
 
 
 class RestoreStats:
@@ -182,20 +199,26 @@ def _build_state(
     )
 
 
-def state_from_dist(
-    ckpt: DistCheckpoint,
+def state_from_source(
+    source,
     plan: ShardingPlan,
     jmesh: jax.sharding.Mesh,
     stats: RestoreStats | None = None,
     *,
     engine: CheckpointEngine | None = None,
 ) -> TrainState:
+    """Restore a full TrainState from any fragment source (disk checkpoint
+    or in-memory hot snapshot) via indexed region reads."""
     engine = engine or default_engine()
 
     def reader(name, kind, region, dtype):
-        return read_region_from_dist(ckpt, name, kind, region, dtype, engine=engine)
+        return read_region_from_source(source, name, kind, region, dtype, engine=engine)
 
-    return _build_state(reader, plan, jmesh, int(ckpt.manifest.step), stats, engine)
+    return _build_state(reader, plan, jmesh, int(source.manifest.step), stats, engine)
+
+
+# Historical name, kept for disk-checkpoint call sites.
+state_from_dist = state_from_source
 
 
 def state_from_ucp(

@@ -27,12 +27,12 @@ from typing import Any, Mapping
 import jax
 import numpy as np
 
-from repro.core.dist_ckpt import DistCheckpoint, DistManifest
+from repro.core.dist_ckpt import DistCheckpoint, DistManifest, shard_digest_key
 from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.layout import slice_shard
 from repro.core.patterns import StateKind
 from repro.core.pytree import flatten_with_paths
-from repro.core.tensor_io import fsync_path, resolve_dtype
+from repro.core.tensor_io import content_digest, fsync_path, resolve_dtype
 from repro.dist.sharding import ShardingPlan
 from repro.train.optimizer import TrainState
 
@@ -119,10 +119,10 @@ def write_distributed(
             for rank in ckpt.writing_ranks(name, kind):
                 jobs.append((rank, name, kind, arr, layout))
 
-    def write_one(job) -> int:
+    def write_one(job) -> tuple[int, str, str]:
         rank, name, kind, arr, layout = job
         entries = layout.entries[rank]
-        written = None
+        written = digest = None
         if (
             not serial
             and len(entries) == 1
@@ -135,21 +135,28 @@ def write_distributed(
                 # contiguous rectangle of the snapshot — write the view
                 # directly, no staging copy at all.
                 written = ckpt.write_shard(rank, name, kind, view, fsync=False)
+                digest = content_digest(view)
         if written is None:
             # engine.alloc degrades to plain np.zeros under the serial
             # reference profile, so workers=1 stages exactly like the
             # pre-engine code did.
             shard = slice_shard(arr, layout, rank, alloc=engine.alloc)
             written = ckpt.write_shard(rank, name, kind, shard, fsync=serial)
+            digest = content_digest(shard)
             engine.recycle(shard)  # bytes are on disk (or in page cache) now
         if not serial:
             # Pipelined durability: flush this file now, overlapping the
             # fsync round-trip with the other workers' writes.
             fsync_path(ckpt.shard_path(rank, name, kind))
-        return written
+        return written, shard_digest_key(rank, name, kind), digest
 
     try:
-        written = sum(engine.map(write_one, jobs))
+        results = engine.map(write_one, jobs)
+        written = sum(w for w, _, _ in results)
+        # Content digests land in the manifest before COMMIT, so a committed
+        # checkpoint always carries verifiable integrity metadata.
+        manifest.shard_digests = {k: d for _, k, d in results}
+        ckpt.rewrite_manifest()
         # A re-save into an existing directory must not leave readers on
         # stale handles of the replaced files (os.replace keeps old inodes
         # alive under cached mmaps/arrays).  Invalidate every engine that

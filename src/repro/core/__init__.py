@@ -17,8 +17,16 @@ without Source or Target accelerators (paper §3.1).
 
 from .atoms import AtomInfo, UcpCheckpoint, UcpManifest
 from .convert import ConvertStats, convert_to_ucp
-from .dist_ckpt import DistCheckpoint, DistManifest
-from .engine import CheckpointEngine, FragmentIndex, HandleCache, default_engine
+from .dist_ckpt import DistCheckpoint, DistManifest, shard_digest_key
+from .engine import (
+    CheckpointEngine,
+    FragmentIndex,
+    FragmentSource,
+    HandleCache,
+    default_engine,
+    source_cache_key,
+)
+from .tensor_io import IntegrityError, content_digest
 from .layout import (
     DimSpec,
     IndexEntry,
@@ -52,8 +60,10 @@ from .pytree import flatten_with_paths, tree_map_with_path, unflatten_from_paths
 __all__ = [
     "AtomInfo", "UcpCheckpoint", "UcpManifest",
     "ConvertStats", "convert_to_ucp",
-    "DistCheckpoint", "DistManifest",
-    "CheckpointEngine", "FragmentIndex", "HandleCache", "default_engine",
+    "DistCheckpoint", "DistManifest", "shard_digest_key",
+    "CheckpointEngine", "FragmentIndex", "FragmentSource", "HandleCache",
+    "default_engine", "source_cache_key",
+    "IntegrityError", "content_digest",
     "DimSpec", "IndexEntry", "MeshSpec", "ShardLayout", "SubFragment",
     "compute_layout", "normalize_partition_spec",
     "LoadPlan", "ParamLoadPlan", "extract", "gen_ucp_metadata",

@@ -39,13 +39,19 @@ UCP_FORMAT_VERSION = "repro-ucp/v1"
 
 @dataclasses.dataclass(frozen=True)
 class AtomInfo:
-    """Index entry for one atom (one parameter)."""
+    """Index entry for one atom (one parameter).
+
+    ``digests`` maps state kind → content digest (``crc32:...``) of the
+    atom tensor, recorded by ``convert_to_ucp`` and checked by
+    :meth:`UcpCheckpoint.validate`.  Empty for pre-digest checkpoints.
+    """
 
     name: str
     logical_shape: tuple[int, ...]
     dtypes: dict[StateKind, str]  # dtype each state kind is stored as
     stacked_dim: int | None = None
     kind: str = "dense"
+    digests: dict[StateKind, str] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict:
         return {
@@ -54,6 +60,7 @@ class AtomInfo:
             "dtypes": {k.value: v for k, v in self.dtypes.items()},
             "stacked_dim": self.stacked_dim,
             "kind": self.kind,
+            "digests": {k.value: v for k, v in self.digests.items()},
         }
 
     @classmethod
@@ -64,6 +71,7 @@ class AtomInfo:
             dtypes={StateKind(k): str(v) for k, v in d["dtypes"].items()},
             stacked_dim=d.get("stacked_dim"),
             kind=str(d.get("kind", "dense")),
+            digests={StateKind(k): str(v) for k, v in d.get("digests", {}).items()},
         )
 
 
@@ -180,7 +188,11 @@ class UcpCheckpoint:
         return sum(p.stat().st_size for p in self.root.glob("atoms/**/*.npy"))
 
     def validate(self) -> list[str]:
-        """Integrity check: every indexed atom file exists with the right shape."""
+        """Integrity check: every indexed atom file exists with the right
+        shape, and (when the manifest carries digests) its content bytes
+        match the digest recorded at conversion time."""
+        from .tensor_io import content_digest
+
         problems: list[str] = []
         for name, info in self.manifest.atoms.items():
             for kind in STATE_KINDS:
@@ -194,5 +206,12 @@ class UcpCheckpoint:
                 if tuple(arr.shape) != tuple(info.logical_shape):
                     problems.append(
                         f"{name}@{kind.value}: shape {arr.shape} != {info.logical_shape}"
+                    )
+                    continue
+                want = info.digests.get(kind)
+                if want is not None and content_digest(arr) != want:
+                    problems.append(
+                        f"{name}@{kind.value}: content digest mismatch "
+                        f"(recorded {want})"
                     )
         return problems

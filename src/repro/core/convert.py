@@ -27,7 +27,7 @@ from .dist_ckpt import DistCheckpoint
 from .engine import CheckpointEngine
 from .ops import strip_padding, union
 from .patterns import ParamSpec, StateKind, STATE_KINDS
-from .tensor_io import resolve_dtype
+from .tensor_io import content_digest, resolve_dtype
 
 __all__ = ["ConvertStats", "convert_to_ucp"]
 
@@ -52,13 +52,16 @@ def _convert_one(
     spec: ParamSpec,
     streaming: bool,
     engine: CheckpointEngine | None = None,
-) -> tuple[int, int, int]:
+) -> tuple[int, int, int, dict[StateKind, str]]:
     """Union + StripPadding + Save for one parameter (all state kinds).
 
-    Returns ``(bytes_read, bytes_written, atoms_written)`` — one atom file
-    per state kind the parameter carries (up to 3), not one per parameter.
+    Returns ``(bytes_read, bytes_written, atoms_written, digests)`` — one
+    atom file per state kind the parameter carries (up to 3), not one per
+    parameter; ``digests`` records each atom's content digest for the
+    manifest (verified by ``UcpCheckpoint.validate``).
     """
     read = written = atoms = 0
+    digests: dict[StateKind, str] = {}
     for kind in STATE_KINDS:
         if kind not in spec.states:
             continue
@@ -78,10 +81,11 @@ def _convert_one(
         else:
             atom = union(ckpt, spec, kind, engine=engine)
             ucp.write_atom(spec.name, kind, np.ascontiguousarray(atom))
+        digests[kind] = content_digest(atom)
         read += int(np.prod(spec.runtime_shape)) * dtype.itemsize
         written += atom.nbytes
         atoms += 1
-    return read, written, atoms
+    return read, written, atoms, digests
 
 
 def convert_to_ucp(
@@ -150,16 +154,21 @@ def convert_to_ucp(
         engine = CheckpointEngine(workers=4)
         owns_engine = True
     try:
+        specs = list(todo.values())
         results = engine.map(
-            lambda s: _convert_one(ckpt, ucp, s, streaming, engine), todo.values()
+            lambda s: _convert_one(ckpt, ucp, s, streaming, engine), specs
         )
     finally:
         if owns_engine:
             engine.close()
-    for r, w, a in results:
+    for spec, (r, w, a, digests) in zip(specs, results):
         stats.bytes_read += r
         stats.bytes_written += w
         stats.atoms_written += a
+        ucp.manifest.atoms[spec.name] = dataclasses.replace(
+            ucp.manifest.atoms[spec.name], digests=digests
+        )
+    ucp._write_manifest()  # digests land before COMMIT
     stats.wall_time_s = time.perf_counter() - t0
     ucp.commit()
     return ucp, stats

@@ -34,15 +34,39 @@ import numpy as np
 
 from .layout import MeshSpec, ShardLayout
 from .patterns import ParamSpec, StateKind
-from .tensor_io import dtype_name, load_tensor, save_tensor
+from .tensor_io import content_digest, dtype_name, load_tensor, save_tensor
 
-__all__ = ["DistManifest", "DistCheckpoint", "shard_filename", "FORMAT_VERSION"]
+__all__ = [
+    "DistManifest",
+    "DistCheckpoint",
+    "shard_filename",
+    "shard_digest_key",
+    "writing_ranks_for",
+    "FORMAT_VERSION",
+]
 
 FORMAT_VERSION = "repro-dist/v1"
 
 
 def shard_filename(name: str, kind: StateKind) -> str:
     return f"{name}@{kind.value}.npy"
+
+
+def shard_digest_key(rank: int, name: str, kind: StateKind) -> str:
+    """Manifest key of one shard's content digest (mirrors the file layout)."""
+    return f"rank_{rank:05d}/{name}@{kind.value}"
+
+
+def writing_ranks_for(spec: ParamSpec, layout: ShardLayout, save_mode: str) -> list[int]:
+    """Which ranks persist one (param, kind) under ``save_mode``.
+
+    Shared by the disk format and the hot in-memory tier so both enumerate
+    exactly the same fragment owners.  ``average`` params never dedup:
+    every replica holds *different* data.
+    """
+    if save_mode == "all" or spec.average:
+        return [r for r in layout.mesh.ranks() if layout.entries[r]]
+    return [r for r in layout.primary_ranks() if layout.entries[r]]
 
 
 @dataclasses.dataclass
@@ -53,6 +77,12 @@ class DistManifest:
     iterator cursor, LR-schedule state) as plain JSON — these are
     ``replicated_params`` in the paper's taxonomy but too small to matter
     as tensors.
+
+    ``shard_digests`` maps :func:`shard_digest_key` → content digest
+    (``crc32:...``) of every persisted shard, recorded at save time and
+    checked by :meth:`DistCheckpoint.validate` / ``restore(verify=True)``.
+    Empty for checkpoints written before digests existed (verification is
+    then a no-op, not a failure).
     """
 
     step: int
@@ -63,6 +93,7 @@ class DistManifest:
     save_mode: str = "dedup"  # "dedup" | "all"
     format_version: str = FORMAT_VERSION
     created_at: float = 0.0
+    shard_digests: dict[str, str] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict:
         return {
@@ -74,6 +105,7 @@ class DistManifest:
             "config_fingerprint": self.config_fingerprint,
             "save_mode": self.save_mode,
             "created_at": self.created_at,
+            "shard_digests": self.shard_digests,
         }
 
     @classmethod
@@ -88,6 +120,7 @@ class DistManifest:
             config_fingerprint=dict(d["config_fingerprint"]),
             save_mode=str(d.get("save_mode", "dedup")),
             created_at=float(d.get("created_at", 0.0)),
+            shard_digests={str(k): str(v) for k, v in d.get("shard_digests", {}).items()},
         )
 
 
@@ -113,6 +146,11 @@ class DistCheckpoint:
     def is_committed(self) -> bool:
         return self.commit_path.exists()
 
+    @property
+    def cache_key(self) -> str:
+        """Engine index-cache identity (see ``repro.core.engine.FragmentSource``)."""
+        return str(self.root)
+
     # ------------------------------------------------------------------ write
     @classmethod
     def create(cls, root: str | os.PathLike, manifest: DistManifest) -> "DistCheckpoint":
@@ -120,10 +158,15 @@ class DistCheckpoint:
         root.mkdir(parents=True, exist_ok=True)
         manifest.created_at = time.time()
         ckpt = cls(root, manifest)
-        tmp = root / "MANIFEST.json.tmp"
-        tmp.write_text(json.dumps(manifest.to_json(), indent=1))
-        os.replace(tmp, root / "MANIFEST.json")
+        ckpt.rewrite_manifest()
         return ckpt
+
+    def rewrite_manifest(self) -> None:
+        """(Re)write MANIFEST.json atomically — used at create time and again
+        after the shard pass filled in ``shard_digests``."""
+        tmp = self.root / "MANIFEST.json.tmp"
+        tmp.write_text(json.dumps(self.manifest.to_json(), indent=1))
+        os.replace(tmp, self.root / "MANIFEST.json")
 
     def write_shard(
         self, rank: int, name: str, kind: StateKind, shard: np.ndarray,
@@ -143,10 +186,7 @@ class DistCheckpoint:
         """Which ranks persist this (param, kind) under the manifest save_mode."""
         spec = self.manifest.params[name]
         layout = spec.layout_for(kind, self.manifest.mesh)
-        if self.manifest.save_mode == "all" or spec.average:
-            # average params: every replica holds *different* data → no dedup.
-            return [r for r in layout.mesh.ranks() if layout.entries[r]]
-        return [r for r in layout.primary_ranks() if layout.entries[r]]
+        return writing_ranks_for(spec, layout, self.manifest.save_mode)
 
     def commit(self) -> None:
         """Atomic completion marker — written last, fsync'd.
@@ -182,6 +222,15 @@ class DistCheckpoint:
             return cache.get(path, loader)
         return loader()
 
+    def read_fragment(
+        self, rank: int, name: str, kind: StateKind, *, engine=None
+    ) -> np.ndarray:
+        """FragmentSource read: the shard file, handle-cached when an
+        engine is supplied (one open per file across regions and params)."""
+        if engine is not None:
+            return engine.read_shard(self, rank, name, kind)
+        return self.read_shard(rank, name, kind)
+
     def iter_param_fragments(
         self, name: str, kind: StateKind, *, engine=None
     ) -> Iterator[tuple[int, ShardLayout, np.ndarray]]:
@@ -204,3 +253,33 @@ class DistCheckpoint:
         return sum(
             p.stat().st_size for p in self.root.glob("ranks/**/*.npy")
         )
+
+    # -------------------------------------------------------------- integrity
+    def validate(self) -> list[str]:
+        """Integrity check: every expected shard file exists, and (when the
+        manifest carries digests) its content bytes match the digest recorded
+        at save time.  Returns a list of problems; empty == clean."""
+        problems: list[str] = []
+        for name, spec in self.manifest.params.items():
+            for kind in spec.states:
+                for rank in self.writing_ranks(name, kind):
+                    path = self.shard_path(rank, name, kind)
+                    if not path.exists():
+                        problems.append(f"missing shard file {path}")
+                        continue
+                    want = self.manifest.shard_digests.get(
+                        shard_digest_key(rank, name, kind)
+                    )
+                    if want is None:
+                        continue  # pre-digest checkpoint: existence only
+                    try:
+                        got = content_digest(self.read_shard(rank, name, kind))
+                    except Exception as e:  # unreadable == corrupt
+                        problems.append(f"unreadable shard {path}: {e}")
+                        continue
+                    if got != want:
+                        problems.append(
+                            f"{shard_digest_key(rank, name, kind)}: "
+                            f"digest {got} != recorded {want}"
+                        )
+        return problems

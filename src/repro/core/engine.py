@@ -26,6 +26,21 @@ reconfiguration cost) depend on operationally:
 The engine is deliberately format-agnostic glue: it never interprets tensor
 contents, so ``repro.core.ops`` stays pure and the on-disk formats are
 unchanged — an engine-enabled reader and the serial reader are bit-identical.
+
+**Fragment sources.**  The index and the region-read path are generic over
+a *fragment source* — anything that answers the three questions a region
+read needs (see :class:`FragmentSource`):
+
+* ``.manifest`` — a :class:`~repro.core.dist_ckpt.DistManifest`-shaped
+  header (``params``, ``mesh``, ``save_mode``);
+* ``.writing_ranks(name, kind)`` — which ranks' fragments are *available*;
+* ``.read_fragment(rank, name, kind, engine=...)`` — the fragment bytes.
+
+:class:`~repro.core.dist_ckpt.DistCheckpoint` (atom-slice files on disk)
+and :class:`repro.hot.snapshot.HotSnapshot` (peer-replicated shard buffers
+in host memory) both implement it, so the DIRECT and direct-reshard restore
+paths serve from disk and from the hot tier through one code path
+(``repro.ckpt.restore.read_region_from_source``).
 """
 
 from __future__ import annotations
@@ -37,7 +52,7 @@ import sys
 import threading
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Iterable, Sequence
+from typing import Any, Callable, Iterable, Protocol, Sequence, runtime_checkable
 
 import numpy as np
 
@@ -47,9 +62,11 @@ __all__ = [
     "BufferArena",
     "CheckpointEngine",
     "FragmentIndex",
+    "FragmentSource",
     "HandleCache",
     "default_engine",
     "default_workers",
+    "source_cache_key",
 ]
 
 
@@ -57,6 +74,42 @@ def default_workers() -> int:
     """Pool width when the caller does not choose: enough threads to overlap
     fsync latency even on small hosts, bounded so huge hosts don't thrash."""
     return min(16, max(4, (os.cpu_count() or 2) * 2))
+
+
+# ---------------------------------------------------------------------------
+# Fragment sources
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class FragmentSource(Protocol):
+    """Anything the indexed region-read path can serve fragments from.
+
+    A fragment source pairs a manifest (the geometry: ``params``, ``mesh``,
+    ``save_mode``) with a way to enumerate and read the fragments that are
+    currently *available* — for a disk checkpoint that is every persisted
+    shard file; for an in-memory hot snapshot it is every fragment with at
+    least one surviving replica holder.  ``cache_key`` identifies the
+    source's *contents* for the engine's index cache: it must change when
+    availability changes (the hot tier bumps a generation counter on rank
+    failure), and it must be stable across reads of unchanged contents.
+    """
+
+    @property
+    def manifest(self) -> Any: ...
+
+    @property
+    def cache_key(self) -> str: ...
+
+    def writing_ranks(self, name: str, kind) -> list[int]: ...
+
+    def read_fragment(self, rank: int, name: str, kind, *, engine=None) -> np.ndarray: ...
+
+
+def source_cache_key(source) -> str:
+    """Index-cache identity of a source (``cache_key``, else the root path)."""
+    key = getattr(source, "cache_key", None)
+    return key if key is not None else str(source.root)
 
 
 # ---------------------------------------------------------------------------
@@ -286,25 +339,27 @@ class HandleCache:
 
 
 class FragmentIndex:
-    """Sorted interval index over one ``(checkpoint, param, kind)``.
+    """Sorted interval index over one ``(fragment source, param, kind)``.
 
-    Indexes the atom-slices of every persisted fragment entry (one
+    Indexes the atom-slices of every available fragment entry (one
     representative writing rank per distinct fragment — replicas hold
     byte-identical data).  ``overlapping(region)`` returns exactly the
     entries that intersect a runtime-coordinate region, found by bisecting
     the dim-0 intervals and exact-checking the remaining dims, instead of
-    scanning all ranks × entries.
+    scanning all ranks × entries.  ``source`` is any :class:`FragmentSource`
+    (disk checkpoint or in-memory hot snapshot) — the index only consumes
+    the manifest geometry and the available-rank enumeration.
     """
 
-    def __init__(self, ckpt, name: str, kind) -> None:
-        manifest = ckpt.manifest
+    def __init__(self, source, name: str, kind) -> None:
+        manifest = source.manifest
         self.name = name
         self.kind = kind
         self.spec = manifest.params[name]
         self.layout = self.spec.layout_for(kind, manifest.mesh)
         items: list[tuple[int, int, int, Any]] = []
         seen_frags: set[int] = set()
-        for rank in ckpt.writing_ranks(name, kind):
+        for rank in source.writing_ranks(name, kind):
             frag = self.layout.fragment_id[rank]
             if frag in seen_frags:
                 continue
@@ -464,13 +519,13 @@ class CheckpointEngine:
         self.close()
 
     # ----------------------------------------------------------------- index
-    def index_for(self, ckpt, name: str, kind) -> FragmentIndex:
-        """The (cached) fragment index of one ``(checkpoint, param, kind)``."""
-        key = (str(ckpt.root), name, getattr(kind, "value", str(kind)))
+    def index_for(self, source, name: str, kind) -> FragmentIndex:
+        """The (cached) fragment index of one ``(source, param, kind)``."""
+        key = (source_cache_key(source), name, getattr(kind, "value", str(kind)))
         idx = self._indexes.get(key)
         if idx is not None:
             return idx
-        idx = FragmentIndex(ckpt, name, kind)
+        idx = FragmentIndex(source, name, kind)
         with self._index_lock:
             return self._indexes.setdefault(key, idx)
 
@@ -481,6 +536,18 @@ class CheckpointEngine:
         return self.handles.get(
             path, lambda: ckpt.read_shard(rank, name, kind, mmap=self.mmap_handles)
         )
+
+    def read_fragment(self, source, rank: int, name: str, kind) -> np.ndarray:
+        """One available fragment of any :class:`FragmentSource`.
+
+        Disk checkpoints route through the handle cache (each shard file
+        opened once across regions and parameters); in-memory sources hand
+        their buffer back directly — both land in the same region-read loop.
+        """
+        read = getattr(source, "read_fragment", None)
+        if read is not None:
+            return read(rank, name, kind, engine=self)
+        return self.read_shard(source, rank, name, kind)
 
     def read_atom(self, ucp, name: str, kind) -> np.ndarray:
         """Handle-cached read of one UCP atom file."""

@@ -14,6 +14,13 @@ Layout equality is structural — mesh axes/sizes, per-state dims, runtime
 shapes, dtypes — not object identity, so e.g. a restart on identical
 hardware after a crash is always DIRECT even though every Python object was
 rebuilt from scratch.
+
+The hot in-memory tier (``repro.hot``) sits *above* this ladder: when a
+recent peer-replicated snapshot survives in host memory, recovery takes
+``HOT_DIRECT`` (identical layout) or ``HOT_RESHARD`` (region reads unioned
+from surviving in-memory fragments) and never touches disk; the planner in
+``repro.hot.recovery`` falls through to the two disk modes here when the
+surviving replicas cannot cover the state (see DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -34,6 +41,8 @@ __all__ = ["ResumeMode", "TargetSpec", "ResumePlan", "plan_resume", "direct_load
 
 
 class ResumeMode(str, enum.Enum):
+    HOT_DIRECT = "hot_direct"    # in-memory snapshot, identical layout
+    HOT_RESHARD = "hot_reshard"  # in-memory snapshot, resharded on the fly
     DIRECT = "direct"     # same layout: per-rank shard reads, no conversion
     VIA_UCP = "via_ucp"   # layout changed: convert to atoms, then UCP Load
 

@@ -1,0 +1,48 @@
+"""The hot in-memory checkpoint tier (beyond-paper subsystem).
+
+Sits *in front of* the disk formats: every ``hot_interval`` steps the
+trainer's state is staged into host memory as a :class:`HotSnapshot`
+(same shard geometry as the disk format, peer-replicated across buddy
+ranks), every Nth snapshot is drained to a durable
+:class:`~repro.core.dist_ckpt.DistCheckpoint` in the background, and
+recovery walks the tier ladder
+
+    HOT_DIRECT → HOT_RESHARD → DIRECT → VIA_UCP
+
+serving from surviving in-memory replicas when it can and falling
+through to disk when it cannot (see DESIGN.md §5 and
+``repro.hot.recovery``).
+
+* :mod:`repro.hot.snapshot`  — ``HotSnapshot`` (a FragmentSource) and the
+  ``HotTier`` ring buffer with a byte budget
+* :mod:`repro.hot.replicate` — buddy-group replica placement (skips
+  fragments the sharding plan already replicates)
+* :mod:`repro.hot.drain`     — background promotion to disk
+* :mod:`repro.hot.recovery`  — tiered resume planning + ``state_from_hot``
+"""
+
+from .drain import HotDrainer, persist_snapshot
+from .recovery import (
+    HotRecoveryPlan,
+    plan_hot_recovery,
+    reshard_compatible,
+    state_from_hot,
+)
+from .replicate import ReplicaStats, ReplicationPolicy, buddy_group, place_holders
+from .snapshot import HotFragment, HotSnapshot, HotTier
+
+__all__ = [
+    "HotDrainer",
+    "persist_snapshot",
+    "HotRecoveryPlan",
+    "plan_hot_recovery",
+    "reshard_compatible",
+    "state_from_hot",
+    "ReplicaStats",
+    "ReplicationPolicy",
+    "buddy_group",
+    "place_holders",
+    "HotFragment",
+    "HotSnapshot",
+    "HotTier",
+]

@@ -1,0 +1,203 @@
+"""Drain: background promotion of hot snapshots to durable disk checkpoints.
+
+The hot tier makes per-iteration-frequency checkpointing cheap, but host
+memory is not durable — a correlated failure (whole-job preemption, power
+loss) erases every replica.  The drainer closes that hole by promoting
+every Nth hot snapshot to an ordinary committed
+:class:`~repro.core.dist_ckpt.DistCheckpoint` on a background thread, so
+training pays in-memory capture latency at every hot step and disk
+latency never (the paper's CheckFreq-style overlap, one tier down).
+
+Promotion is a byte copy, not a re-slice: the hot snapshot already holds
+exactly the shards the disk format wants (same writing ranks, same
+geometry — see ``HotTier.capture``), and the capture-time content digests
+ride along into the disk manifest for free.  Writes fan out over the
+engine's worker pool with the same pipelined-fsync-then-COMMIT discipline
+as ``write_distributed``, so a crash mid-drain leaves an uncommitted
+directory that discovery ignores and GC removes.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from pathlib import Path
+
+from repro.core.dist_ckpt import DistCheckpoint, DistManifest, shard_digest_key
+from repro.core.engine import CheckpointEngine, default_engine
+from repro.core.patterns import StateKind
+from repro.core.tensor_io import fsync_path
+from repro.ckpt.saver import SaveResult
+
+from .snapshot import HotSnapshot
+
+__all__ = ["HotDrainer", "persist_snapshot"]
+
+
+def persist_snapshot(
+    snapshot: HotSnapshot,
+    root,
+    *,
+    engine: CheckpointEngine | None = None,
+    fragments: list | None = None,
+) -> SaveResult:
+    """Write one hot snapshot to disk as a committed distributed checkpoint.
+
+    The result is byte-identical to ``write_distributed`` of the same state
+    (same shard files, same digests); refuses to persist a snapshot that
+    lost fragments to rank failures or was emptied by ring eviction (a
+    committed checkpoint with holes would be worse than none — discovery
+    could not tell it from a complete one).
+
+    ``fragments``: an eagerly-captured ``snapshot.fragments()`` list.  The
+    background drainer captures it at *enqueue* time, so a ring eviction
+    (``release()``) between enqueue and execution cannot empty the job —
+    the list's array references keep the bytes alive (arena reclamation is
+    refcount-gated) even after the snapshot itself is released.
+    """
+    t0 = time.perf_counter()
+    if fragments is None:
+        # Direct call: check completeness now.  (The drainer checks at
+        # enqueue time instead — after a ring eviction released the
+        # snapshot, missing_fragments() is vacuously empty and only the
+        # eagerly-captured list reflects what the snapshot really held.)
+        missing = snapshot.missing_fragments()
+        if missing:
+            raise ValueError(
+                f"refusing to persist incomplete hot snapshot step "
+                f"{snapshot.step}: missing {missing[:3]}"
+                f"{'...' if len(missing) > 3 else ''}"
+            )
+        fragments = snapshot.fragments()
+    if not fragments:
+        raise ValueError(
+            f"refusing to persist empty hot snapshot step {snapshot.step} "
+            "(released by ring eviction before the drain ran?)"
+        )
+    engine = engine or default_engine()
+    serial = engine.workers == 1
+    m = snapshot.manifest
+    manifest = DistManifest(
+        step=m.step,
+        mesh=m.mesh,
+        params=dict(m.params),
+        scalars=dict(m.scalars),
+        config_fingerprint=dict(m.config_fingerprint),
+        save_mode=m.save_mode,
+        # digests come from the captured fragment list, not the (possibly
+        # since-released) snapshot dicts.
+        shard_digests={
+            shard_digest_key(f.owner, name, StateKind(kv)): f.digest
+            for name, kv, f in fragments
+        },
+    )
+    ckpt = DistCheckpoint.create(root, manifest)
+    jobs = [
+        (name, StateKind(kv), frag.owner, frag.data)
+        for name, kv, frag in fragments
+    ]
+
+    def write_one(job) -> int:
+        name, kind, rank, data = job
+        written = ckpt.write_shard(rank, name, kind, data, fsync=serial)
+        if not serial:
+            fsync_path(ckpt.shard_path(rank, name, kind))
+        return written
+
+    written = sum(engine.map(write_one, jobs))
+    engine.invalidate(ckpt.root)  # a re-drain into the same dir replaced files
+    ckpt.commit()
+    return SaveResult(snapshot.step, Path(str(root)), written, time.perf_counter() - t0)
+
+
+class HotDrainer:
+    """Background thread promoting every ``every``-th hot snapshot to disk.
+
+    ``maybe_drain`` is called once per capture; it enqueues a persist job
+    for every Nth snapshot and returns immediately (the queue bounds
+    pending promotions — each pins its snapshot's buffers — and applies
+    backpressure instead of growing without bound on a slow disk).
+    Errors surface on the next ``check()``/``wait()``, like AsyncSaver.
+    """
+
+    def __init__(
+        self,
+        *,
+        every: int = 1,
+        engine: CheckpointEngine | None = None,
+        max_pending: int = 2,
+    ):
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        self.every = int(every)
+        self.engine = engine or default_engine()
+        self._seq = 0
+        self._q: queue.Queue = queue.Queue(maxsize=max_pending)
+        self._results: list[SaveResult] = []
+        self._errors: list[BaseException] = []
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                self._q.task_done()
+                return
+            try:
+                self._results.append(item())
+            except BaseException as e:  # surfaced via check()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def maybe_drain(self, snapshot: HotSnapshot, root) -> bool:
+        """Enqueue promotion if this snapshot is an Nth one; True if queued."""
+        if self._closed:
+            raise RuntimeError("HotDrainer.maybe_drain() after close()")
+        self.check()
+        self._seq += 1
+        if self._seq % self.every:
+            return False
+        missing = snapshot.missing_fragments()
+        if missing:
+            raise ValueError(
+                f"refusing to drain incomplete hot snapshot step "
+                f"{snapshot.step}: missing {missing[:3]}"
+                f"{'...' if len(missing) > 3 else ''}"
+            )
+        engine = self.engine
+        # Capture the fragment list NOW: a ring eviction between enqueue and
+        # execution releases the snapshot, and persisting the then-empty
+        # snapshot would commit a checkpoint with zero shards.
+        fragments = snapshot.fragments()
+        self._q.put(
+            lambda: persist_snapshot(
+                snapshot, root, engine=engine, fragments=fragments
+            )
+        )
+        return True
+
+    def check(self) -> None:
+        if self._errors:
+            err = self._errors.pop(0)
+            raise RuntimeError("hot snapshot drain failed") from err
+
+    def wait(self) -> list[SaveResult]:
+        self._q.join()
+        self.check()
+        out, self._results = self._results, []
+        return out
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._q.join()
+        self._q.put(None)
+        self._thread.join(timeout=10)
+        self.check()

@@ -1,0 +1,143 @@
+"""Tiered recovery planning: serve a resume from the cheapest tier that can.
+
+The recovery ladder (DESIGN.md §5), top = cheapest:
+
+    HOT_DIRECT   surviving in-memory snapshot, layout unchanged — each
+                 device region coincides with one resident fragment; no
+                 disk I/O, no transformation.
+    HOT_RESHARD  surviving in-memory snapshot, layout changed — regions
+                 are unioned from resident fragments through the same
+                 indexed read path the disk direct-reshard uses; still no
+                 disk I/O.
+    DIRECT       disk checkpoint, layout unchanged (per-rank shard reads).
+    VIA_UCP      disk checkpoint, layout changed (convert to atoms once,
+                 then Load) — handles everything the hot tier cannot,
+                 e.g. a changed parameter set or logical shapes.
+
+``plan_hot_recovery`` decides whether either hot tier applies: the newest
+snapshot that (a) is at least as fresh as the best disk checkpoint,
+(b) still covers every fragment after failures, and (c) is structurally
+servable under the target.  Anything else falls through to the disk
+planner (``repro.core.plan.plan_resume``) inside
+``CheckpointManager.restore``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.plan import ResumeMode, TargetSpec, layouts_equal
+from repro.core.tensor_io import IntegrityError
+
+from .snapshot import HotSnapshot, HotTier
+
+__all__ = [
+    "HotRecoveryPlan",
+    "plan_hot_recovery",
+    "reshard_compatible",
+    "state_from_hot",
+]
+
+
+@dataclasses.dataclass
+class HotRecoveryPlan:
+    mode: ResumeMode  # HOT_DIRECT | HOT_RESHARD
+    snapshot: HotSnapshot
+    step: int
+    reason: str
+
+
+def reshard_compatible(manifest, target: TargetSpec) -> str | None:
+    """Can HOT_RESHARD serve ``target`` from this snapshot?  None == yes.
+
+    The indexed region-read path serves *runtime-coordinate* regions, so
+    the target may change mesh, fragmentation, replication and dtype —
+    but not the parameter set or the runtime/logical shapes (those need
+    the UCP atom transformation: StripPadding / re-pad / re-average).
+    """
+    if set(manifest.params) != set(target.params):
+        return "parameter set changed"
+    for name, src in manifest.params.items():
+        tgt = target.params[name]
+        if tuple(src.runtime_shape) != tuple(tgt.runtime_shape):
+            return f"{name}: runtime shape {src.runtime_shape} -> {tgt.runtime_shape}"
+        if tuple(src.logical_shape) != tuple(tgt.logical_shape):
+            return f"{name}: logical shape {src.logical_shape} -> {tgt.logical_shape}"
+        if src.average != tgt.average:
+            return f"{name}: average-param marker changed"
+        if set(src.states) != set(tgt.states):
+            return f"{name}: state kinds changed"
+    return None
+
+
+def plan_hot_recovery(
+    tier: HotTier | None,
+    target: TargetSpec,
+    *,
+    min_step: int | None = None,
+) -> HotRecoveryPlan | None:
+    """Pick the hot tier that can serve ``target``, or None to go to disk.
+
+    Scans the ring newest → oldest; a snapshot older than ``min_step``
+    (the best committed disk checkpoint) is never preferred — recovering
+    an older state from memory would silently roll training back further
+    than the disk tier does.
+    """
+    if tier is None:
+        return None
+    for snap in reversed(tier.snapshots()):
+        if min_step is not None and snap.step < min_step:
+            return None  # ring is step-ordered: everything older loses too
+        missing = snap.missing_fragments()
+        if missing:
+            continue  # an older snapshot may still have full coverage
+        if layouts_equal(snap.manifest, target):
+            return HotRecoveryPlan(
+                mode=ResumeMode.HOT_DIRECT,
+                snapshot=snap,
+                step=snap.step,
+                reason=f"in-memory snapshot @ step {snap.step}, layout unchanged",
+            )
+        why_not = reshard_compatible(snap.manifest, target)
+        if why_not is None:
+            return HotRecoveryPlan(
+                mode=ResumeMode.HOT_RESHARD,
+                snapshot=snap,
+                step=snap.step,
+                reason=(
+                    f"in-memory snapshot @ step {snap.step}, "
+                    f"resharding from surviving replicas"
+                ),
+            )
+        # structurally unservable (shape/param-set change): every snapshot
+        # in the ring shares the training run's manifest → disk it is.
+        return None
+    return None
+
+
+def state_from_hot(
+    snapshot: HotSnapshot,
+    plan,
+    jmesh,
+    stats=None,
+    *,
+    engine=None,
+    verify: bool = False,
+):
+    """Restore a TrainState from an in-memory snapshot (no disk I/O).
+
+    ``verify=True`` re-digests every surviving fragment against its
+    capture-time digest first — a replica that rotted in host memory
+    raises :class:`IntegrityError` instead of silently resuming from
+    corrupt state.
+    """
+    from repro.ckpt.restore import state_from_source
+
+    if verify:
+        problems = snapshot.verify()
+        if problems:
+            raise IntegrityError(
+                f"hot snapshot @ step {snapshot.step} failed verification: "
+                + "; ".join(problems[:5])
+            )
+    return state_from_source(snapshot, plan, jmesh, stats, engine=engine)

@@ -1,0 +1,359 @@
+"""The hot tier's in-memory checkpoint objects.
+
+A :class:`HotSnapshot` is one step's distributed checkpoint held in host
+memory instead of on disk: the same :class:`~repro.core.dist_ckpt.DistManifest`
+header, with each persisted fragment stored as a shard array (staged
+through the engine's :class:`~repro.core.engine.BufferArena`) plus the set
+of ranks whose memory holds a replica of it (see ``replicate.py``).
+
+``HotSnapshot`` implements the engine's
+:class:`~repro.core.engine.FragmentSource` protocol — ``manifest`` /
+``writing_ranks`` / ``read_fragment`` / ``cache_key`` — which is what lets
+``read_region_from_source`` and the whole indexed restore path serve from
+memory and from disk through one code path.  After rank failures,
+``writing_ranks`` enumerates only fragments with a surviving holder and
+``cache_key`` changes (generation bump), so stale fragment indexes are
+never consulted.
+
+:class:`HotTier` is the ring buffer of snapshots with a byte budget:
+``capture`` appends the newest and evicts the oldest once the modeled
+aggregate host-memory residency (fragment bytes × holders, i.e. what a
+real deployment's hosts would actually pin) exceeds the budget.  Evicted
+buffers recycle through the arena, so steady-state ring turnover reuses
+warm storage instead of re-faulting fresh pages every snapshot.
+
+Single-process simulation note: replica copies are byte-identical by
+construction, so the simulation stores each fragment's bytes once and
+tracks holder ranks; ``fail_ranks`` drops dead holders and frees a
+fragment only when its last holder is gone — exactly the observable
+semantics of per-host replica loss, without multiplying simulation memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from collections import deque
+from typing import Any, Iterable, Mapping
+
+import numpy as np
+
+from repro.core.dist_ckpt import (
+    DistManifest,
+    shard_digest_key,
+    writing_ranks_for,
+)
+from repro.core.engine import CheckpointEngine, default_engine
+from repro.core.layout import slice_shard
+from repro.core.patterns import StateKind
+from repro.core.tensor_io import content_digest, resolve_dtype
+
+from .replicate import ReplicaStats, ReplicationPolicy, place_holders
+
+__all__ = ["HotFragment", "HotSnapshot", "HotTier"]
+
+_uid_counter = itertools.count(1)
+
+
+@dataclasses.dataclass
+class HotFragment:
+    """One stored fragment: bytes + replica holders + capture-time digest."""
+
+    owner: int
+    data: np.ndarray
+    holders: tuple[int, ...]
+    digest: str
+
+    def alive(self, failed: set[int]) -> bool:
+        return any(h not in failed for h in self.holders)
+
+
+class HotSnapshot:
+    """One step's peer-replicated in-memory checkpoint (a FragmentSource)."""
+
+    def __init__(self, step: int, manifest: DistManifest, *, uid: str | None = None):
+        self.step = int(step)
+        self.manifest = manifest
+        self.uid = uid or f"snap{next(_uid_counter)}"
+        self.failed_ranks: set[int] = set()
+        self._gen = 0
+        # (name, kind.value, owner) -> fragment;  (name, kind.value) -> owners
+        self._frags: dict[tuple[str, str, int], HotFragment] = {}
+        self._owners: dict[tuple[str, str], tuple[int, ...]] = {}
+
+    # --------------------------------------------------- FragmentSource API
+    @property
+    def cache_key(self) -> str:
+        """Changes on every failure event, so the engine never serves a
+        region from a fragment index built before availability changed."""
+        return f"hot://{self.uid}/step_{self.step}#g{self._gen}"
+
+    def writing_ranks(self, name: str, kind: StateKind) -> list[int]:
+        """Owners of fragments that still have a surviving replica holder."""
+        kv = getattr(kind, "value", str(kind))
+        return [
+            o
+            for o in self._owners.get((name, kv), ())
+            if self._frags[(name, kv, o)].alive(self.failed_ranks)
+        ]
+
+    def read_fragment(
+        self, rank: int, name: str, kind: StateKind, *, engine=None
+    ) -> np.ndarray:
+        kv = getattr(kind, "value", str(kind))
+        frag = self._frags[(name, kv, rank)]
+        if not frag.alive(self.failed_ranks):
+            raise KeyError(
+                f"{name}@{kv} owner {rank}: every replica holder failed"
+            )
+        return frag.data
+
+    # --------------------------------------------------------------- content
+    def add_fragment(
+        self,
+        name: str,
+        kind: StateKind,
+        owner: int,
+        data: np.ndarray,
+        holders: tuple[int, ...],
+        digest: str,
+    ) -> None:
+        kv = getattr(kind, "value", str(kind))
+        self._frags[(name, kv, owner)] = HotFragment(owner, data, holders, digest)
+        self._owners[(name, kv)] = self._owners.get((name, kv), ()) + (owner,)
+
+    def fragments(self) -> list[tuple[str, str, HotFragment]]:
+        """Live ``(name, kind_value, fragment)`` triples (stable order)."""
+        return [
+            (name, kv, f)
+            for (name, kv, _), f in sorted(self._frags.items())
+            if f.alive(self.failed_ranks)
+        ]
+
+    def shard_digests(self) -> dict[str, str]:
+        """Capture-time digests in disk-manifest form (drain reuses them)."""
+        return {
+            shard_digest_key(f.owner, name, StateKind(kv)): f.digest
+            for (name, kv, _), f in sorted(self._frags.items())
+        }
+
+    @property
+    def stored_nbytes(self) -> int:
+        """Bytes stored once per fragment (simulation memory)."""
+        return sum(f.data.nbytes for f in self._frags.values())
+
+    @property
+    def resident_nbytes(self) -> int:
+        """Modeled aggregate host residency: bytes × surviving holders."""
+        return sum(
+            f.data.nbytes * sum(1 for h in f.holders if h not in self.failed_ranks)
+            for f in self._frags.values()
+        )
+
+    # -------------------------------------------------------------- failures
+    def fail_ranks(self, ranks: Iterable[int], *, engine=None) -> list[str]:
+        """Lose ``ranks``' host memory; free fragments with no survivor.
+
+        Returns the keys of fragments that became unrecoverable (empty ==
+        the snapshot still covers the full state).
+        """
+        self.failed_ranks |= set(int(r) for r in ranks)
+        self._gen += 1
+        dead: list[str] = []
+        for key, frag in list(self._frags.items()):
+            if not frag.alive(self.failed_ranks):
+                name, kv, owner = key
+                dead.append(f"{name}@{kv} owner {owner}")
+                if engine is not None:
+                    engine.recycle(frag.data)
+                frag.data = np.empty(0, np.uint8)  # bytes are gone
+        return dead
+
+    def missing_fragments(self) -> list[str]:
+        """Captured fragments whose every holder has failed."""
+        return [
+            f"{name}@{kv} owner {owner}"
+            for (name, kv, owner), f in sorted(self._frags.items())
+            if not f.alive(self.failed_ranks)
+        ]
+
+    def is_complete(self) -> bool:
+        return not self.missing_fragments()
+
+    # -------------------------------------------------------------- integrity
+    def verify(self) -> list[str]:
+        """Re-digest every surviving fragment against its capture digest."""
+        problems: list[str] = []
+        for name, kv, frag in self.fragments():
+            got = content_digest(frag.data)
+            if got != frag.digest:
+                problems.append(
+                    f"{name}@{kv} owner {frag.owner}: digest {got} != "
+                    f"captured {frag.digest}"
+                )
+        return problems
+
+    def release(self, engine: CheckpointEngine | None = None) -> None:
+        """Return every buffer to the arena (ring eviction / clear)."""
+        if engine is not None:
+            for frag in self._frags.values():
+                engine.recycle(frag.data)
+        self._frags.clear()
+        self._owners.clear()
+        self._gen += 1
+
+
+class HotTier:
+    """Ring buffer of peer-replicated in-memory snapshots with a byte budget."""
+
+    def __init__(
+        self,
+        *,
+        replication: int = 1,
+        max_snapshots: int = 4,
+        max_bytes: int = 2 << 30,
+        engine: CheckpointEngine | None = None,
+        save_mode: str = "dedup",
+    ):
+        self.policy = ReplicationPolicy(replication)
+        self.max_snapshots = int(max_snapshots)
+        if self.max_snapshots < 1:
+            raise ValueError(f"max_snapshots must be >= 1, got {max_snapshots}")
+        self.max_bytes = int(max_bytes)
+        self.engine = engine or default_engine()
+        self.save_mode = save_mode
+        self.failed_ranks: set[int] = set()
+        self._ring: deque[HotSnapshot] = deque()
+        self._lock = threading.Lock()
+        self.captures = 0
+        self.evictions = 0
+
+    # ---------------------------------------------------------------- capture
+    def capture(
+        self,
+        snap: Mapping[str, Mapping[StateKind, np.ndarray]],
+        plan,
+        step: int,
+        *,
+        scalars: Mapping[str, Any] | None = None,
+        config_fingerprint: Mapping[str, Any] | None = None,
+    ) -> tuple[HotSnapshot, ReplicaStats]:
+        """Stage one host snapshot into the ring (the hot "save").
+
+        ``snap`` is ``snapshot_state(state)`` output; fragments are sliced
+        exactly like the disk save path (same writing ranks, same shard
+        geometry, same digests) so a drained hot snapshot is byte-identical
+        to a direct ``write_distributed`` of the same state.
+        """
+        manifest = DistManifest(
+            step=int(step),
+            mesh=plan.mesh,
+            params=dict(plan.param_specs),
+            scalars=dict(scalars or {}) | {"step": int(step)},
+            config_fingerprint=dict(config_fingerprint or {}),
+            save_mode=self.save_mode,
+        )
+        hs = HotSnapshot(step, manifest)
+        stats = ReplicaStats()
+        engine = self.engine
+
+        jobs: list[tuple[str, StateKind, int, np.ndarray, Any]] = []
+        for name, spec in plan.param_specs.items():
+            for kind, arr in snap[name].items():
+                dt = resolve_dtype(spec.states[kind].dtype)
+                arr = arr.astype(dt, copy=False)
+                layout = spec.layout_for(kind, plan.mesh)
+                for rank in writing_ranks_for(spec, layout, self.save_mode):
+                    jobs.append((name, kind, rank, arr, layout))
+
+        failed = frozenset(self.failed_ranks)  # consistent view per capture
+
+        def stage(job):
+            name, kind, rank, arr, layout = job
+            shard = slice_shard(arr, layout, rank, alloc=engine.alloc)
+            spec = plan.param_specs[name]
+            holders = place_holders(
+                layout, rank, self.policy,
+                natural_replication=not spec.average and self.save_mode != "all",
+                exclude=failed,  # dead buddies never count as holders
+            )
+            return name, kind, rank, shard, holders, content_digest(shard)
+
+        for name, kind, rank, shard, holders, digest in engine.map(stage, jobs):
+            hs.add_fragment(name, kind, rank, shard, holders, digest)
+            spec = plan.param_specs[name]
+            if spec.average or self.save_mode == "all":
+                natural = 1  # replicas diverge (or are stored per-rank)
+            else:
+                layout = spec.layout_for(kind, plan.mesh)
+                natural = len([
+                    r
+                    for r in layout.ranks_for_fragment(layout.fragment_id[rank])
+                    if r not in failed
+                ])
+            stats.fragments += 1
+            stats.stored_bytes += shard.nbytes
+            stats.resident_bytes += shard.nbytes * len(holders)
+            if natural >= len(holders):
+                stats.natural_fragments += 1
+            else:
+                stats.mirrored_bytes += shard.nbytes * (len(holders) - natural)
+
+        with self._lock:
+            if self.failed_ranks:
+                # ranks already lost before this capture hold nothing
+                hs.fail_ranks(self.failed_ranks, engine=engine)
+            self._ring.append(hs)
+            self.captures += 1
+            self._evict_locked()
+        return hs, stats
+
+    def _evict_locked(self) -> None:
+        def over_budget() -> bool:
+            return (
+                len(self._ring) > self.max_snapshots
+                or sum(s.resident_nbytes for s in self._ring) > self.max_bytes
+            )
+
+        while len(self._ring) > 1 and over_budget():
+            old = self._ring.popleft()
+            old.release(self.engine)
+            self.evictions += 1
+
+    # ----------------------------------------------------------------- lookup
+    def snapshots(self) -> list[HotSnapshot]:
+        """Oldest → newest."""
+        with self._lock:
+            return list(self._ring)
+
+    def latest(self) -> HotSnapshot | None:
+        with self._lock:
+            return self._ring[-1] if self._ring else None
+
+    @property
+    def resident_nbytes(self) -> int:
+        with self._lock:
+            return sum(s.resident_nbytes for s in self._ring)
+
+    # --------------------------------------------------------------- failures
+    def fail_ranks(self, ranks: Iterable[int]) -> dict[int, list[str]]:
+        """Simulate losing ``ranks``' host memory across every snapshot.
+
+        Returns {step: unrecoverable fragment keys} for snapshots that lost
+        coverage (recovery planning will skip those).
+        """
+        ranks = set(int(r) for r in ranks)
+        self.failed_ranks |= ranks
+        out: dict[int, list[str]] = {}
+        with self._lock:
+            for s in self._ring:
+                dead = s.fail_ranks(ranks, engine=self.engine)
+                if dead:
+                    out[s.step] = dead
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            while self._ring:
+                self._ring.popleft().release(self.engine)

@@ -40,6 +40,11 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--seq", type=int, default=64)
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--save-interval", type=int, default=10)
+    p.add_argument("--hot-interval", type=int, default=None,
+                   help="capture an in-memory peer-replicated snapshot every "
+                   "N steps (repro.hot); every save-interval/hot-interval-th "
+                   "snapshot is drained to disk in the background")
+    p.add_argument("--hot-replication", type=int, default=1)
     p.add_argument("--keep-last", type=int, default=10)
     p.add_argument("--sync-save", action="store_true")
     p.add_argument("--zero", type=int, default=3, choices=(1, 2, 3))
@@ -106,6 +111,8 @@ def main(argv=None) -> int:
         ckpt_dir=args.ckpt_dir,
         keep_last=args.keep_last,
         save_interval=args.save_interval,
+        hot_interval=args.hot_interval,
+        hot_replication=args.hot_replication,
         async_save=not args.sync_save,
     )
     state, info = trainer.init_or_restore()

@@ -63,6 +63,8 @@ class Trainer:
         ckpt_dir: str | None = None,
         keep_last: int = 3,
         save_interval: int = 50,
+        hot_interval: int | None = None,
+        hot_replication: int = 1,
         async_save: bool = True,
         grad_transform=None,
     ) -> "Trainer":
@@ -80,6 +82,8 @@ class Trainer:
                 plan,
                 keep_last=keep_last,
                 save_interval=save_interval,
+                hot_interval=hot_interval,
+                hot_replication=hot_replication,
                 async_save=async_save,
                 config_fingerprint={
                     "model": cfg.fingerprint(),
@@ -155,7 +159,10 @@ class Trainer:
 
     def init_or_restore(self) -> tuple[TrainState, RestoreInfo | None]:
         if self.manager is not None:
-            res = self.manager.restore(self.jmesh)
+            # Tiered: surviving in-memory snapshots first (HOT_DIRECT /
+            # HOT_RESHARD), then the disk ladder; identical to restore()
+            # when the hot tier is off.
+            res = self.manager.restore_latest(self.jmesh)
             if res is not None:
                 return res
         return self.init_state(), None

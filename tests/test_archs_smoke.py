@@ -9,6 +9,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+# Multi-second subprocess/e2e tests: excluded from `scripts/ci.sh --fast`.
+pytestmark = pytest.mark.slow
+
 from repro.configs import (
     SHAPES,
     ParallelismConfig,

@@ -153,6 +153,7 @@ def test_moe_group_invariance():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(
     st.sampled_from([1, 2, 4, 8, 16, 32]),

@@ -13,6 +13,9 @@ import sys
 
 import pytest
 
+# Multi-second subprocess/e2e tests: excluded from `scripts/ci.sh --fast`.
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # Loss tolerance: the paper accepts <0.02 divergence (GPU nondeterminism);
 # on CPU the only divergence source is reduction-order changes from the new

@@ -6,6 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Multi-second subprocess/e2e tests: excluded from `scripts/ci.sh --fast`.
+pytestmark = pytest.mark.slow
+
 from repro.configs import ParallelismConfig, TrainConfig, get_config, reduced
 from repro.core.layout import MeshSpec
 from repro.core.plan import ResumeMode
