@@ -33,7 +33,12 @@ from repro.core.convert import convert_to_ucp
 from repro.core.dist_ckpt import DistCheckpoint
 from repro.ckpt.engine import CheckpointEngine
 from repro.ckpt.manager import CheckpointManager
-from repro.ckpt.restore import RestoreStats, state_from_dist, state_from_ucp
+from repro.ckpt.restore import (
+    RestoreStats,
+    state_from_dist,
+    state_from_stream,
+    state_from_ucp,
+)
 from repro.ckpt.saver import AsyncSaver, snapshot_state, write_distributed
 from repro.core.layout import MeshSpec
 from repro.dist.sharding import make_plan, vocab_multiple
@@ -133,19 +138,37 @@ def bench_save_cost(sizes=("small", "medium")) -> list[tuple[str, float, str]]:
     return rows
 
 
+def _tree_file_census(root) -> tuple[int, int]:
+    """(file count, total bytes) under ``root`` — proves a restore wrote
+    nothing to disk."""
+    files = [p for p in Path(root).rglob("*") if p.is_file()]
+    return len(files), sum(p.stat().st_size for p in files)
+
+
 def bench_transform_load(
     sizes=("small", "medium", "large")
 ) -> list[tuple[str, float, str]]:
-    """Fig. 12: standard load vs UCP convert+load vs direct-reshard, with
-    the direct-reshard path benchmarked serial (workers=1) vs parallel."""
+    """Fig. 12: standard load vs UCP convert+load vs direct-reshard vs the
+    RESHARD_STREAM resume (which replaced VIA_UCP on the resume hot path).
+
+    The ``reshard_stream_*`` rows assert *zero intermediate bytes written
+    to disk* during the streamed reconfiguration, and at the medium size
+    that streaming beats the VIA_UCP convert+load round-trip by >= 1.5x
+    while staying bit-identical to it.  ``reshard_stream_mixed_*`` changes
+    the TP degree so the fused-QKV params exercise the in-memory
+    consolidation fallback inside the stream."""
+    from repro.core.plan import ResumeMode, TargetSpec, plan_resume
+
     rows = []
     src_mesh = default_mesh(4, 2)
     tgt_mesh = default_mesh(2, 2)
+    mix_mesh = default_mesh(4, 1)  # TP 2 -> 1: fused params consolidate
     parallel = ParallelismConfig()
     jmesh = jax.make_mesh((1, 1), ("data", "model"))
     for size in sizes:
         cfg, lm, plan_src, state = build_sized(size, src_mesh, parallel)
         plan_tgt = make_plan(cfg, lm.registry, parallel, tgt_mesh)
+        plan_mix = make_plan(cfg, lm.registry, parallel, mix_mesh)
         snap = snapshot_state(state)
         nbytes = state_nbytes(state)
         with bench_tmpdir() as tmp:
@@ -185,6 +208,56 @@ def bench_transform_load(
                     "parallel direct-reshard restore diverged from serial"
                 )
                 del s_ser, s_par
+
+            # RESHARD_STREAM: the resume path that replaced VIA_UCP —
+            # stream fragments into the target layout, consolidating only
+            # the params whose transform needs it, never touching disk.
+            rp = plan_resume(
+                ck.manifest, TargetSpec(plan_tgt.mesh, plan_tgt.param_specs)
+            )
+            assert rp.mode == ResumeMode.RESHARD_STREAM, rp.mode
+            census0 = _tree_file_census(tmp)
+            t_stream = _timeit(
+                lambda: state_from_stream(
+                    ck, plan_tgt, jmesh, rp.transforms, engine=eng_par
+                ),
+                n=3,
+            )
+            leaked = _tree_file_census(tmp)
+            assert leaked == census0, (
+                f"stream restore wrote to disk: {census0} -> {leaked}"
+            )
+            t_via = t_conv + t_load
+            if size == "medium":
+                assert t_via / t_stream >= 1.5, (
+                    f"stream {t_stream:.3f}s not >=1.5x faster than "
+                    f"via-UCP {t_via:.3f}s"
+                )
+                s_stream = state_from_stream(
+                    ck, plan_tgt, jmesh, rp.transforms, engine=eng_par
+                )
+                s_via = state_from_ucp(ucp, plan_tgt, jmesh, engine=eng_par)
+                assert _states_equal(s_stream, s_via), (
+                    "stream restore diverged from the VIA_UCP restore"
+                )
+                del s_stream, s_via
+
+            # mixed plan table: TP degree change → fused params take the
+            # in-memory consolidation fallback inside the stream
+            rp_mix = plan_resume(
+                ck.manifest, TargetSpec(plan_mix.mesh, plan_mix.param_specs)
+            )
+            assert rp_mix.mode == ResumeMode.RESHARD_STREAM
+            n_cons = len(rp_mix.consolidate_params)
+            assert n_cons > 0, "mixed reshard should consolidate fused params"
+            census0 = _tree_file_census(tmp)
+            t_mix = _timeit(
+                lambda: state_from_stream(
+                    ck, plan_mix, jmesh, rp_mix.transforms, engine=eng_par
+                ),
+                n=2,
+            )
+            assert _tree_file_census(tmp) == census0
             eng_ser.close()
             eng_par.close()
 
@@ -194,11 +267,18 @@ def bench_transform_load(
                      f"{cstats.throughput_mb_s():.0f}MB/s"))
         rows.append((f"ucp_load_{size}", t_load * 1e6,
                      f"convert+load/std={(t_conv+t_load)/t_std:.2f}x"))
+        rows.append((f"via_ucp_total_{size}", t_via * 1e6,
+                     f"{nbytes/1e6/t_via:.0f}MB/s"))
         rows.append((f"direct_reshard_serial_{size}", t_direct_ser * 1e6,
                      f"{nbytes/1e6/t_direct_ser:.0f}MB/s"))
         rows.append((f"direct_reshard_{size}", t_direct * 1e6,
                      f"speedup={t_direct_ser/t_direct:.2f}x;"
                      f"vs_ucp_path={(t_conv+t_load)/t_direct:.2f}x"))
+        rows.append((f"reshard_stream_{size}", t_stream * 1e6,
+                     f"vs_via_ucp={t_via/t_stream:.2f}x;intermediate_bytes=0"))
+        rows.append((f"reshard_stream_mixed_{size}", t_mix * 1e6,
+                     f"consolidated={n_cons};vs_via_ucp={t_via/t_mix:.2f}x;"
+                     f"intermediate_bytes=0"))
     return rows
 
 

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Fast-fail CI for the repo.
+# Fast-fail CI for the repo (run by .github/workflows/ci.yml).
 #
 # Stage 1 — import smoke: import every module under src/repro.  A missing
 # module (the failure mode that once broke the whole suite at collection)
@@ -8,7 +8,7 @@
 # default lane for iteration is `--fast`: it deselects tests marked `slow`
 # (multi-second subprocess/e2e/property tests).  The tier-1 gate
 # (ROADMAP.md) remains the FULL suite — run ci.sh without --fast before
-# shipping.
+# shipping (the main/nightly CI lane does).
 # Stage 3 — benchmark smoke: a small-size save-cost + hot-tier run with
 # --json, compared against the committed BENCH_checkpointing.json baseline
 # within a loose tolerance (scripts/bench_compare.py) so an
@@ -20,12 +20,20 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+stage="setup"
+smoke_json=""
+cleanup() { if [[ -n "$smoke_json" ]]; then rm -f "$smoke_json"; fi; }
+on_err() { echo "ci.sh: FAILED during stage: $stage" >&2; }
+trap cleanup EXIT
+trap on_err ERR
+
 PYTEST_ARGS=()
 if [[ "${1:-}" == "--fast" ]]; then
     shift
     PYTEST_ARGS+=(-m "not slow")
 fi
 
+stage="import-smoke"
 python - <<'PY'
 import importlib
 import pkgutil
@@ -49,8 +57,10 @@ if failed:
     sys.exit(1)
 PY
 
+stage="pytest"
 python -m pytest -x -q "${PYTEST_ARGS[@]}" "$@"
 
+stage="bench-smoke"
 smoke_json="$(mktemp /tmp/bench_smoke.XXXXXX.json)"
 python -m benchmarks.run --only save_cost,hot_tier --sizes small \
     --json "$smoke_json" >/dev/null
@@ -67,5 +77,8 @@ assert any(n.startswith("save_parallel_") for n in names), names
 assert any(n.startswith("hot_capture_") for n in names), names
 print(f"bench-smoke: {len(rows)} rows ok")
 PY
+
+stage="bench-compare"
 python scripts/bench_compare.py "$smoke_json" BENCH_checkpointing.json
-rm -f "$smoke_json"
+
+stage="done"

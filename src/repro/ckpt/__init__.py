@@ -5,6 +5,7 @@ from .restore import (
     read_region_from_source,
     state_from_dist,
     state_from_source,
+    state_from_stream,
     state_from_ucp,
 )
 from .saver import AsyncSaver, SaveResult, snapshot_state, write_distributed
@@ -12,6 +13,6 @@ __all__ = [
     "CheckpointEngine", "FragmentIndex", "HandleCache", "default_engine",
     "CheckpointManager", "RestoreInfo", "read_region_from_dist",
     "read_region_from_source", "state_from_dist", "state_from_source",
-    "state_from_ucp", "AsyncSaver", "SaveResult",
+    "state_from_stream", "state_from_ucp", "AsyncSaver", "SaveResult",
     "snapshot_state", "write_distributed",
 ]

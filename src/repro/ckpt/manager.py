@@ -7,12 +7,17 @@ Responsibilities:
   peer-replicated host snapshots with every Nth promoted to disk in the
   background (``disk_interval``), see :mod:`repro.hot`;
 * discovery that skips uncommitted (crashed) checkpoint directories;
-* tiered resume (``restore_latest``): HOT_DIRECT → HOT_RESHARD from
-  surviving in-memory replicas, falling through to the disk tiers;
-* disk resume that implements the paper's *lazy* conversion: DIRECT
-  per-rank reads when the Target layout equals the Source, one-time
-  conversion to a cached UCP atom directory (``<step dir>.ucp``) when it
-  does not;
+* tiered resume (``restore_latest``): the ladder is
+  HOT_DIRECT → HOT_RESHARD → DIRECT → RESHARD_STREAM → VIA_UCP —
+  surviving in-memory replicas first, then the disk tiers;
+* disk resume beyond the paper's lazy conversion: DIRECT per-rank reads
+  when the Target layout equals the Source; otherwise RESHARD_STREAM
+  streams Source fragments straight into the Target layout (consolidating
+  the few params that need it in memory) with **zero intermediate bytes
+  written to disk**.  VIA_UCP — convert to a cached UCP atom directory
+  (``<step dir>.ucp``), then Load — remains the fallback when streaming
+  fails mid-flight or the parameter set changed, and the explicit export
+  path (``export_ucp``);
 * the UCP cache is shared: five different Targets resuming from the same
   Source convert once (hub-format property, paper §3.1);
 * opt-in integrity verification (``verify=True``) against the content
@@ -33,11 +38,11 @@ from repro.core.atoms import UcpCheckpoint
 from repro.core.convert import ConvertStats, convert_to_ucp
 from repro.core.dist_ckpt import DistCheckpoint
 from repro.core.engine import CheckpointEngine, default_engine
-from repro.core.plan import ResumeMode, TargetSpec, plan_resume
+from repro.core.plan import ResumeMode, TargetSpec, plan_resume, stream_transforms
 from repro.core.tensor_io import IntegrityError
 from repro.dist.sharding import ShardingPlan
 from repro.train.optimizer import TrainState
-from .restore import RestoreStats, state_from_dist, state_from_ucp
+from .restore import RestoreStats, state_from_dist, state_from_stream, state_from_ucp
 from .saver import AsyncSaver, SaveResult, snapshot_state, write_distributed
 
 __all__ = ["CheckpointManager", "RestoreInfo"]
@@ -221,9 +226,18 @@ class CheckpointManager:
         target_plan: ShardingPlan | None = None,
         convert_workers: int | None = None,
         verify: bool = False,
+        force_mode: ResumeMode | None = None,
     ) -> tuple[TrainState, RestoreInfo] | None:
         """Resume onto ``jmesh`` under ``target_plan`` (default: own plan)
-        from the *disk* tiers (DIRECT / VIA_UCP).
+        from the *disk* tiers (DIRECT → RESHARD_STREAM → VIA_UCP).
+
+        A layout change streams Source fragments directly into the Target
+        layout (``RESHARD_STREAM``, zero intermediate bytes on disk); a
+        stream failure mid-flight (e.g. a shard file lost after planning)
+        falls back cleanly to the VIA_UCP convert+Load path.  ``force_mode``
+        pins a specific mode instead — RESHARD_STREAM / VIA_UCP for
+        benchmarking one path against the other (no silent fallback when
+        forced), DIRECT only when the layouts are actually equal.
 
         ``convert_workers`` overrides the conversion pool width for this
         call (None = the manager's own engine/pool).  ``verify=True``
@@ -246,39 +260,115 @@ class CheckpointManager:
                 )
         target = TargetSpec(plan.mesh, plan.param_specs)
         rp = plan_resume(ckpt.manifest, target)
+        mode = rp.mode
+        reason = rp.reason
+        if force_mode is not None:
+            force = ResumeMode(force_mode)
+            if force is ResumeMode.DIRECT and rp.mode is not ResumeMode.DIRECT:
+                raise ValueError(
+                    f"cannot force DIRECT resume: layouts differ ({rp.reason})"
+                )
+            if force not in (
+                ResumeMode.DIRECT, ResumeMode.RESHARD_STREAM, ResumeMode.VIA_UCP
+            ):
+                raise ValueError(f"cannot force disk resume mode {force}")
+            mode = force
+            reason = f"forced {force.value}; planner said {rp.mode.value}"
         stats = RestoreStats()
         cstats: ConvertStats | None = None
-        if rp.mode == ResumeMode.DIRECT:
+        state: TrainState | None = None
+        if mode == ResumeMode.DIRECT:
             state = state_from_dist(ckpt, plan, jmesh, stats, engine=self.engine)
-        else:
-            ucp_dir = Path(str(self.step_dir(step)) + ".ucp")
-            if (ucp_dir / "COMMIT").exists():
-                ucp = UcpCheckpoint.open(ucp_dir)
-            else:
-                shutil.rmtree(ucp_dir, ignore_errors=True)  # partial convert
-                ucp, cstats = convert_to_ucp(
-                    ckpt, str(ucp_dir), workers=convert_workers, engine=self.engine
-                )  # explicit convert_workers wins over the manager engine
-            if verify and cstats is None:
-                # cached UCP directory: its atoms were not just produced
-                # from the (already-verified) shards — check their digests.
-                problems = ucp.validate()
-                if problems:
-                    raise IntegrityError(
-                        f"cached UCP for step {step} failed verification: "
-                        + "; ".join(problems[:5])
-                    )
+        elif mode == ResumeMode.RESHARD_STREAM:
+            transforms = rp.transforms or stream_transforms(ckpt.manifest, target)
+            try:
+                state = state_from_stream(
+                    ckpt, plan, jmesh, transforms, stats, engine=self.engine
+                )
+            except (OSError, KeyError, IntegrityError) as e:
+                # Expected stream-time failures: a shard file lost/corrupt
+                # after planning, a manifest entry gone.  Programming errors
+                # propagate — silently degrading every resume to VIA_UCP
+                # would negate the zero-intermediate-bytes property.
+                if force_mode is not None:
+                    raise
+                # Fall back cleanly: drop any cached handles/indexes of the
+                # (possibly damaged) source and take the convert+Load path.
+                self.engine.invalidate(ckpt.root)
+                mode = ResumeMode.VIA_UCP
+                reason = (
+                    f"{reason}; stream failed ({type(e).__name__}: {e}), "
+                    "falling back to via_ucp"
+                )
+                stats = RestoreStats()
+        if mode == ResumeMode.VIA_UCP and state is None:
+            ucp, cstats = self._cached_ucp(
+                ckpt, step, convert_workers=convert_workers, verify=verify
+            )
             state = state_from_ucp(ucp, plan, jmesh, stats, engine=self.engine)
         info = RestoreInfo(
             step=step,
-            mode=rp.mode,
-            reason=rp.reason,
+            mode=mode,
+            reason=reason,
             scalars=dict(ckpt.manifest.scalars),
             convert_stats=cstats,
             restore_stats=stats,
             wall_time_s=time.perf_counter() - t0,
         )
         return state, info
+
+    def _cached_ucp(
+        self,
+        ckpt: DistCheckpoint,
+        step: int,
+        *,
+        convert_workers: int | None = None,
+        verify: bool = False,
+    ) -> tuple[UcpCheckpoint, ConvertStats | None]:
+        """The step's UCP atom checkpoint: reuse the committed cache beside
+        the step directory, else convert once (hub-format property)."""
+        cstats: ConvertStats | None = None
+        ucp_dir = Path(str(self.step_dir(step)) + ".ucp")
+        if (ucp_dir / "COMMIT").exists():
+            ucp = UcpCheckpoint.open(ucp_dir)
+        else:
+            shutil.rmtree(ucp_dir, ignore_errors=True)  # partial convert
+            ucp, cstats = convert_to_ucp(
+                ckpt, str(ucp_dir), workers=convert_workers, engine=self.engine
+            )  # explicit convert_workers wins over the manager engine
+        if verify and cstats is None:
+            # cached UCP directory: its atoms were not just produced
+            # from the (already-verified) shards — check their digests.
+            problems = ucp.validate()
+            if problems:
+                raise IntegrityError(
+                    f"cached UCP for step {step} failed verification: "
+                    + "; ".join(problems[:5])
+                )
+        return ucp, cstats
+
+    def export_ucp(
+        self,
+        step: int | None = None,
+        *,
+        convert_workers: int | None = None,
+        verify: bool = False,
+    ) -> tuple[UcpCheckpoint, ConvertStats | None]:
+        """Explicitly export one step as a UCP atom checkpoint.
+
+        Since resume streams (``RESHARD_STREAM``), conversion is no longer
+        on the resume hot path — this is the deliberate export tool for
+        producing the portable hub format (publishing a checkpoint, feeding
+        external consumers).  Reuses the committed ``<step dir>.ucp`` cache
+        when present (``ConvertStats`` is then None).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise ValueError(f"no committed checkpoint under {self.root} to export")
+        ckpt = DistCheckpoint.open(self.step_dir(step))
+        return self._cached_ucp(
+            ckpt, step, convert_workers=convert_workers, verify=verify
+        )
 
     def restore_latest(
         self,
@@ -288,7 +378,8 @@ class CheckpointManager:
         convert_workers: int | None = None,
         verify: bool = False,
     ) -> tuple[TrainState, RestoreInfo] | None:
-        """Tiered resume: walk HOT_DIRECT → HOT_RESHARD → DIRECT → VIA_UCP.
+        """Tiered resume: HOT_DIRECT → HOT_RESHARD → DIRECT →
+        RESHARD_STREAM → VIA_UCP.
 
         Prefers the newest surviving in-memory snapshot when it is at
         least as fresh as the best committed disk checkpoint and its

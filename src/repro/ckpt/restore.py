@@ -32,15 +32,17 @@ degrades to the exact serial order, byte-identical by construction.
 from __future__ import annotations
 
 import math
+from typing import Mapping
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.core.atoms import UcpCheckpoint
+from repro.core.convert import assemble_atom
 from repro.core.engine import CheckpointEngine, default_engine
-from repro.core.ops import read_runtime_region
-from repro.core.patterns import StateKind
+from repro.core.ops import clip_region_to_logical, read_runtime_region
+from repro.core.patterns import ParamTransform, StateKind, TransformClass
 from repro.core.pytree import unflatten_from_paths
 from repro.core.tensor_io import resolve_dtype
 from repro.dist.sharding import ShardingPlan
@@ -50,6 +52,7 @@ __all__ = [
     "read_region_from_source",
     "read_region_from_dist",
     "state_from_source",
+    "state_from_stream",
     "state_from_ucp",
     "state_from_dist",
     "RestoreStats",
@@ -219,6 +222,84 @@ def state_from_source(
 
 # Historical name, kept for disk-checkpoint call sites.
 state_from_dist = state_from_source
+
+
+def state_from_stream(
+    source,
+    plan: ShardingPlan,
+    jmesh: jax.sharding.Mesh,
+    transforms: Mapping[str, ParamTransform],
+    stats: RestoreStats | None = None,
+    *,
+    engine: CheckpointEngine | None = None,
+) -> TrainState:
+    """RESHARD_STREAM: reconfigure parallelism with no intermediate checkpoint.
+
+    Per parameter, the plan table (``transforms``, from
+    :func:`repro.core.plan.stream_transforms`) picks one of two in-memory
+    routes — nothing is ever written to disk:
+
+    * ``IDENTITY`` / ``RESLICE`` — Target device regions are served by the
+      indexed region-read path straight from Source fragments.  Regions are
+      clipped to the logical shape and alignment padding is zero-filled, so
+      the result is bit-identical to what the UCP Load path produces.
+    * ``CONSOLIDATE`` — the parameter's logical atom is assembled in memory
+      (:func:`repro.core.convert.assemble_atom` — the exact kernel the UCP
+      export uses) into the engine's byte-bounded atom cache, then Target
+      regions are served from it exactly like ``state_from_ucp`` serves
+      file-backed atoms.
+
+    ``source`` is any :class:`~repro.core.engine.FragmentSource`: the disk
+    checkpoint (``RESHARD_STREAM``) or a surviving hot snapshot
+    (``HOT_RESHARD``).  Bit-identity with the VIA_UCP restore holds for
+    every transform class by construction.
+    """
+    engine = engine or default_engine()
+    src_params = source.manifest.params
+
+    def reader(name, kind, region, dtype):
+        # Strict lookup: stream_transforms always produces a complete
+        # table; a param missing from a hand-built one must fail loudly
+        # rather than silently take the raw streaming path (which would be
+        # wrong for e.g. an omitted params_to_average entry).
+        tr = transforms[name]
+        tgt_spec = plan.param_specs[name]
+        if tr.cls is TransformClass.CONSOLIDATE:
+            # ascontiguousarray: assemble_atom may return a strip_padding
+            # view into the runtime-shaped staging buffer — caching the
+            # view would pin the padded storage and under-count its weight.
+            atom = engine.consolidated(
+                source, name, kind,
+                lambda: np.ascontiguousarray(
+                    assemble_atom(source, src_params[name], kind, engine=engine)
+                ),
+            )
+            return read_runtime_region(
+                atom, tgt_spec, region, dtype, alloc=engine.alloc
+            )
+        # Stream: Source and Target share one runtime coordinate space (the
+        # classifier guarantees it).  Clip the region to the logical shape
+        # and zero-fill the remainder so alignment padding comes back as
+        # zeros — the same canonical bytes the UCP Load path serves
+        # (clip_region_to_logical is shared with read_runtime_region) —
+        # instead of whatever the Source runtime left in its padded area.
+        region = _canon_region(region, tgt_spec.runtime_shape)
+        shape = tuple(r.stop - r.start for r in region)
+        clipped = clip_region_to_logical(region, tgt_spec.logical_shape)
+        if clipped is None:  # region entirely inside padding
+            return engine.alloc(shape, resolve_dtype(dtype), zero=True)
+        reads, dests, full = clipped
+        inner = read_region_from_source(
+            source, name, kind, reads, dtype, engine=engine
+        )
+        if full:
+            return inner
+        out = engine.alloc(shape, resolve_dtype(dtype), zero=True)
+        out[dests] = inner
+        engine.recycle(inner)
+        return out
+
+    return _build_state(reader, plan, jmesh, int(source.manifest.step), stats, engine)
 
 
 def state_from_ucp(

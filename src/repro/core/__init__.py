@@ -16,7 +16,7 @@ without Source or Target accelerators (paper §3.1).
 """
 
 from .atoms import AtomInfo, UcpCheckpoint, UcpManifest
-from .convert import ConvertStats, convert_to_ucp
+from .convert import ConvertStats, assemble_atom, convert_to_ucp
 from .dist_ckpt import DistCheckpoint, DistManifest, shard_digest_key
 from .engine import (
     CheckpointEngine,
@@ -47,19 +47,29 @@ from .ops import (
 )
 from .patterns import (
     ParamSpec,
+    ParamTransform,
     Pattern,
     StateKind,
     STATE_KINDS,
     StateLayoutSpec,
+    TransformClass,
+    classify_transform,
     derive_pattern,
     uniform_param_spec,
 )
-from .plan import ResumeMode, ResumePlan, TargetSpec, direct_load_shard, plan_resume
+from .plan import (
+    ResumeMode,
+    ResumePlan,
+    TargetSpec,
+    direct_load_shard,
+    plan_resume,
+    stream_transforms,
+)
 from .pytree import flatten_with_paths, tree_map_with_path, unflatten_from_paths
 
 __all__ = [
     "AtomInfo", "UcpCheckpoint", "UcpManifest",
-    "ConvertStats", "convert_to_ucp",
+    "ConvertStats", "assemble_atom", "convert_to_ucp",
     "DistCheckpoint", "DistManifest", "shard_digest_key",
     "CheckpointEngine", "FragmentIndex", "FragmentSource", "HandleCache",
     "default_engine", "source_cache_key",
@@ -68,8 +78,10 @@ __all__ = [
     "compute_layout", "normalize_partition_spec",
     "LoadPlan", "ParamLoadPlan", "extract", "gen_ucp_metadata",
     "load_param_shard", "strip_padding", "union",
-    "ParamSpec", "Pattern", "StateKind", "STATE_KINDS", "StateLayoutSpec",
+    "ParamSpec", "ParamTransform", "Pattern", "StateKind", "STATE_KINDS",
+    "StateLayoutSpec", "TransformClass", "classify_transform",
     "derive_pattern", "uniform_param_spec",
-    "ResumeMode", "ResumePlan", "TargetSpec", "direct_load_shard", "plan_resume",
+    "ResumeMode", "ResumePlan", "TargetSpec", "direct_load_shard",
+    "plan_resume", "stream_transforms",
     "flatten_with_paths", "tree_map_with_path", "unflatten_from_paths",
 ]

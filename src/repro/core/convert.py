@@ -1,9 +1,15 @@
 """Distributed checkpoint → UCP conversion driver (paper Algorithm 1).
 
-The conversion is *lazy and on-demand*: nothing in the hot save path knows
-about UCP.  When a resume detects that the Target (mesh / parallelism /
-precision / padding) differs from the Source, this driver runs once,
-producing the atom checkpoint that any Target can consume.
+Since the streaming reshard landed (``ResumeMode.RESHARD_STREAM``), this
+driver is an *explicit export tool* (``CheckpointManager.export_ucp``) and
+the resume fallback of last resort — the resume hot path streams Source
+fragments straight into the Target layout and never materializes an atom
+checkpoint on disk.  The per-parameter transform kernel is shared:
+:func:`assemble_atom` consolidates one parameter state from any
+:class:`~repro.core.engine.FragmentSource`, and both the export path here
+and the in-memory consolidation fallback of the stream restore
+(``repro.ckpt.restore.state_from_stream``) call it, so the two paths are
+bit-identical by construction.
 
 Parallelism: Union is independent per parameter (paper: "can execute in
 parallel at individual parameter level; more parallelism leads to faster
@@ -25,11 +31,62 @@ import numpy as np
 from .atoms import AtomInfo, UcpCheckpoint, UcpManifest
 from .dist_ckpt import DistCheckpoint
 from .engine import CheckpointEngine
-from .ops import strip_padding, union
+from .ops import strip_padding
 from .patterns import ParamSpec, StateKind, STATE_KINDS
 from .tensor_io import content_digest, resolve_dtype
 
-__all__ = ["ConvertStats", "convert_to_ucp"]
+__all__ = ["ConvertStats", "assemble_atom", "convert_to_ucp"]
+
+
+def assemble_atom(
+    source,
+    spec: ParamSpec,
+    kind: StateKind,
+    *,
+    out: np.ndarray | None = None,
+    engine: CheckpointEngine | None = None,
+) -> np.ndarray:
+    """Consolidate one parameter state into its (logical) atom.
+
+    Pattern dispatch (Algorithm 1), generalized over any
+    :class:`~repro.core.engine.FragmentSource` — a distributed checkpoint
+    on disk or an in-memory hot snapshot:
+
+    * ``replicated_params`` / ``unique_params`` — exactly one distinct
+      fragment exists; its shard is the atom (``ucp_p = fp_1``)
+    * ``fragment_params`` — scatter every available fragment into place
+      (``Concat``), including fused sub-fragments and stage partitions
+    * ``params_to_average`` — scatter all divergent replicas then mean
+      (``StripPadding`` collapses the leading replica dim)
+
+    ``out``: optional pre-opened (mem-mapped) destination of *logical*
+    shape.  When given and the parameter needs no padding-strip or
+    averaging, fragments stream directly into it — constant working memory
+    regardless of parameter size.
+    """
+    mesh = source.manifest.mesh
+    layout = spec.layout_for(kind, mesh)
+    dtype = resolve_dtype(spec.states[kind].dtype)
+    direct = (
+        out is not None
+        and not spec.average
+        and tuple(spec.runtime_shape) == tuple(spec.logical_shape)
+    )
+    target = out if direct else np.zeros(spec.runtime_shape, dtype=dtype)
+
+    for rank in source.writing_ranks(spec.name, kind):
+        if engine is not None:
+            shard = engine.read_fragment(source, rank, spec.name, kind)
+        else:
+            shard = source.read_fragment(rank, spec.name, kind)
+        for e in layout.entries[rank]:
+            target[e.atom_index()] = shard[e.shard_index()]
+
+    atom = target if direct else strip_padding(target, spec)
+    if out is not None and not direct:
+        out[...] = atom
+        atom = out
+    return atom
 
 
 @dataclasses.dataclass
@@ -75,11 +132,11 @@ def _convert_one(
             out = ucp.create_atom_memmap(
                 spec.name, kind, tuple(spec.logical_shape), spec.states[kind].dtype
             )
-            atom = union(ckpt, spec, kind, out=out, engine=engine)
+            atom = assemble_atom(ckpt, spec, kind, out=out, engine=engine)
             if hasattr(out, "flush"):
                 out.flush()
         else:
-            atom = union(ckpt, spec, kind, engine=engine)
+            atom = assemble_atom(ckpt, spec, kind, engine=engine)
             ucp.write_atom(spec.name, kind, np.ascontiguousarray(atom))
         digests[kind] = content_digest(atom)
         read += int(np.prod(spec.runtime_shape)) * dtype.itemsize

@@ -441,6 +441,7 @@ class CheckpointEngine:
         handle_cache_size: int = 1024,
         handle_cache_bytes: int = 1 << 30,
         arena_max_bytes: int = 1 << 30,
+        atom_cache_bytes: int = 1 << 30,
         mmap_handles: bool | None = None,
         use_arena: bool | None = None,
     ) -> None:
@@ -462,9 +463,15 @@ class CheckpointEngine:
         self.mmap_handles = serial if mmap_handles is None else bool(mmap_handles)
         self.use_arena = (not serial) if use_arena is None else bool(use_arena)
         self.handles = HandleCache(handle_cache_size, handle_cache_bytes)
+        # In-memory consolidated atoms (the stream-restore fallback for
+        # params whose transform needs consolidation) — byte-bounded LRU so
+        # a restore's peak memory for fallback atoms is capped.
+        self.atoms = HandleCache(256, atom_cache_bytes)
         self.arena = BufferArena(arena_max_bytes)
         self._indexes: dict[tuple[str, str, str], FragmentIndex] = {}
         self._index_lock = threading.Lock()
+        self._atom_locks: dict[str, threading.Lock] = {}
+        self._atom_locks_lock = threading.Lock()
         self._pool: ThreadPoolExecutor | None = None
         self._pool_lock = threading.Lock()
 
@@ -508,7 +515,10 @@ class CheckpointEngine:
                 self._pool.shutdown(wait=True)
                 self._pool = None
         self.handles.invalidate()
+        self.atoms.invalidate()
         self.arena.clear()
+        with self._atom_locks_lock:
+            self._atom_locks.clear()
         with self._index_lock:
             self._indexes.clear()
 
@@ -556,6 +566,27 @@ class CheckpointEngine:
             path, lambda: ucp.read_atom(name, kind, mmap=self.mmap_handles)
         )
 
+    def consolidated(self, source, name: str, kind, builder: Callable[[], np.ndarray]) -> np.ndarray:
+        """Memoized in-memory consolidated atom of one ``(source, param, kind)``.
+
+        The stream-restore path consolidates the minority of params whose
+        transform genuinely needs the atom (fused repartitioning, padding
+        change, replica averaging) — each is assembled once per source and
+        then serves every Target device region from memory.  Keyed like the
+        fragment indexes (``cache_key``), so ``invalidate(root)`` drops a
+        rewritten checkpoint's atoms too.
+
+        Single-flight per key: a parallel restore prefetches many regions
+        of the same parameter concurrently, and without serialization every
+        cache miss would assemble its own copy of the full atom (the cache
+        loader runs outside the cache lock by design).
+        """
+        key = f"{source_cache_key(source)}::atom::{name}@{getattr(kind, 'value', kind)}"
+        with self._atom_locks_lock:
+            lock = self._atom_locks.setdefault(key, threading.Lock())
+        with lock:
+            return self.atoms.get(key, builder)
+
     def invalidate(self, root: str | os.PathLike | None = None) -> None:
         """Forget cached state (all of it, or one checkpoint root's indexes).
 
@@ -564,11 +595,18 @@ class CheckpointEngine:
         """
         if root is None:
             self.handles.invalidate()
+            self.atoms.invalidate()
+            with self._atom_locks_lock:
+                self._atom_locks.clear()
             with self._index_lock:
                 self._indexes.clear()
             return
         root = str(root)
         self.handles.invalidate_prefix(root)
+        self.atoms.invalidate_prefix(root)
+        with self._atom_locks_lock:
+            for key in [k for k in self._atom_locks if k.startswith(root)]:
+                del self._atom_locks[key]
         with self._index_lock:
             for key in [k for k in self._indexes if k[0] == root]:
                 del self._indexes[key]

@@ -36,6 +36,7 @@ __all__ = [
     "extract",
     "union",
     "strip_padding",
+    "clip_region_to_logical",
     "gen_ucp_metadata",
     "load_param_shard",
     "LoadPlan",
@@ -114,53 +115,15 @@ def union(
 ) -> np.ndarray:
     """Consolidate one parameter state into its (logical) atom.
 
-    Pattern dispatch (Algorithm 1):
-
-    * ``replicated_params`` / ``unique_params`` — exactly one distinct
-      fragment exists; its primary rank's shard is the atom (``ucp_p = fp_1``)
-    * ``fragment_params`` — scatter every distinct fragment into place
-      (``Concat``), including fused sub-fragments and stage partitions
-    * ``params_to_average`` — assemble all replicas then mean
-
-    ``out``: optional pre-opened (mem-mapped) destination of *logical*
-    shape.  When given and the parameter needs no padding-strip or
-    averaging, fragments stream directly into it — constant working memory
-    regardless of parameter size.
-
-    ``engine``: optional :class:`~repro.core.engine.CheckpointEngine` whose
-    handle cache deduplicates shard-file opens across parameters (ZeRO
-    layouts open the same rank files for every parameter).
+    Historical entry point — the kernel now lives in
+    :func:`repro.core.convert.assemble_atom`, generalized over any
+    :class:`~repro.core.engine.FragmentSource` so the UCP export and the
+    in-memory consolidation fallback of the streaming reshard share one
+    implementation; this delegates to it.
     """
-    mesh = ckpt.manifest.mesh
-    layout = spec.layout_for(kind, mesh)
-    dtype = resolve_dtype(spec.states[kind].dtype)
-    direct = (
-        out is not None
-        and not spec.average
-        and tuple(spec.runtime_shape) == tuple(spec.logical_shape)
-    )
+    from .convert import assemble_atom  # deferred: convert imports this module
 
-    if direct:
-        target = out
-    else:
-        target = np.zeros(spec.runtime_shape, dtype=dtype)
-
-    if spec.average:
-        # Every rank holds divergent data → read all owners, then average.
-        for rank, _, shard in ckpt.iter_param_fragments(spec.name, kind, engine=engine):
-            for e in layout.entries[rank]:
-                target[e.atom_index()] = shard[e.shard_index()]
-        atom = strip_padding(target, spec)
-    else:
-        for rank, _, shard in ckpt.iter_param_fragments(spec.name, kind, engine=engine):
-            for e in layout.entries[rank]:
-                target[e.atom_index()] = shard[e.shard_index()]
-        atom = target if direct else strip_padding(target, spec)
-
-    if out is not None and not direct:
-        out[...] = atom
-        atom = out
-    return atom
+    return assemble_atom(ckpt, spec, kind, out=out, engine=engine)
 
 
 # ---------------------------------------------------------------------------
@@ -272,6 +235,32 @@ def _clip_to_logical(
     return tuple(a_out), tuple(s_out)
 
 
+def clip_region_to_logical(
+    region: Sequence[slice], logical_shape: Sequence[int]
+) -> tuple[tuple[slice, ...], tuple[slice, ...], bool] | None:
+    """Clip a canonical runtime-coordinate region to the logical tensor.
+
+    The canonical-padding rule shared by every load path (UCP Load and the
+    streaming reshard): alignment padding beyond ``logical_shape`` is
+    zero-filled, never served from stored bytes.  Returns ``(reads, dests,
+    full)`` — the in-logical sub-region to read, where it lands in the
+    output, and whether it covers the whole region — or None when the
+    region lies entirely inside padding.
+    """
+    reads: list[slice] = []
+    dests: list[slice] = []
+    full = True
+    for r, lim in zip(region, logical_shape):
+        hi = min(r.stop, lim)
+        if hi <= r.start:
+            return None
+        if hi < r.stop:
+            full = False
+        reads.append(slice(r.start, hi))
+        dests.append(slice(0, hi - r.start))
+    return tuple(reads), tuple(dests), full
+
+
 def read_runtime_region(
     atom: np.ndarray,
     spec: ParamSpec,
@@ -301,25 +290,18 @@ def read_runtime_region(
     if alloc is None:
         alloc = lambda s, d, zero=True: np.zeros(s, dtype=d)
     body = region[1:] if spec.average else region
-    reads: list[slice] = []
-    dests: list[slice] = []
-    full = True
-    for r, lim in zip(body, spec.logical_shape):
-        hi = min(r.stop, lim)
-        if hi <= r.start:
-            return alloc(shape, dt, zero=True)  # region entirely inside padding
-        if hi < r.stop:
-            full = False
-        reads.append(slice(r.start, hi))
-        dests.append(slice(0, hi - r.start))
+    clipped = clip_region_to_logical(body, spec.logical_shape)
+    if clipped is None:
+        return alloc(shape, dt, zero=True)  # region entirely inside padding
+    reads, dests, full = clipped
     out = alloc(shape, dt, zero=not full)
-    piece = atom[tuple(reads)]
+    piece = atom[reads]
     # direct assignment: one copy into the output, casting in place — no
     # intermediate astype materialization.
     if spec.average:
         out[(slice(None), *dests)] = piece[None]
     else:
-        out[tuple(dests)] = piece
+        out[dests] = piece
     return out
 
 

@@ -36,6 +36,9 @@ __all__ = [
     "STATE_KINDS",
     "StateLayoutSpec",
     "ParamSpec",
+    "ParamTransform",
+    "TransformClass",
+    "classify_transform",
     "derive_pattern",
 ]
 
@@ -210,6 +213,112 @@ class ParamSpec:
             stacked_dim=d.get("stacked_dim"),
             kind=str(d.get("kind", "dense")),
         )
+
+
+# ---------------------------------------------------------------------------
+# Source → Target transform classification (the RESHARD_STREAM plan table)
+# ---------------------------------------------------------------------------
+
+
+class TransformClass(str, enum.Enum):
+    """How one parameter gets from a Source layout to a Target layout.
+
+    ``IDENTITY``     layouts structurally equal — each Target region is one
+                     Source fragment read (the per-param DIRECT case).
+    ``RESLICE``      pure re-slicing: Source fragments and Target regions
+                     address the *same* runtime coordinate space, so the
+                     indexed region-read path streams Source bytes straight
+                     into the Target layout — no atom ever materialized.
+    ``CONSOLIDATE``  the transform needs the consolidated atom: replica
+                     averaging (``params_to_average``), a runtime-padding
+                     change (StripPadding + re-pad), fused sub-fragment
+                     repartitioning, or MoE expert re-grouping.  The atom is
+                     assembled *in memory* per parameter — consolidation no
+                     longer implies a disk checkpoint.
+    """
+
+    IDENTITY = "identity"
+    RESLICE = "reslice"
+    CONSOLIDATE = "consolidate"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamTransform:
+    """One row of the per-parameter RESHARD_STREAM plan table."""
+
+    name: str
+    cls: TransformClass
+    reason: str = ""
+
+
+def _sharded_dims(spec: StateLayoutSpec) -> tuple[bool, ...]:
+    return tuple(bool(d.axes) for d in spec.dims)
+
+
+def classify_transform(
+    src: ParamSpec,
+    tgt: ParamSpec,
+    src_mesh: MeshSpec,
+    tgt_mesh: MeshSpec,
+) -> ParamTransform:
+    """Classify one parameter's Source→Target transform.
+
+    The streaming path serves Target device regions by unioning Source
+    fragments in *runtime coordinates*; it is valid whenever both sides
+    address the same runtime coordinate space.  Four cases genuinely need
+    the consolidated (logical) atom instead, and are classified
+    ``CONSOLIDATE`` so the planner assembles them in memory:
+
+    * ``params_to_average`` — the atom is the replica mean, then
+      re-broadcast on the Target; no per-fragment copy can produce it;
+    * runtime-shape change (vocab padded to a different mesh multiple, a
+      replica-dim change) — the two runtime coordinate spaces disagree, so
+      the transform is StripPadding → re-pad through the logical atom;
+    * fused sub-fragment repartitioning (packed QKV under a new TP degree)
+      — per-part ceil-division ownership changes, routed through the atom
+      path that the fused-geometry suite validates;
+    * MoE expert re-grouping (EP ↔ expert-TP) — which dimension carries
+      the mesh axis changes, i.e. the grouping itself is transformed.
+    """
+    name = tgt.name
+    if src.average or tgt.average:
+        return ParamTransform(
+            name, TransformClass.CONSOLIDATE,
+            "params_to_average: replica mean + re-broadcast",
+        )
+    if tuple(src.runtime_shape) != tuple(tgt.runtime_shape):
+        return ParamTransform(
+            name, TransformClass.CONSOLIDATE,
+            f"runtime padding change {tuple(src.runtime_shape)} -> "
+            f"{tuple(tgt.runtime_shape)}",
+        )
+    common_kinds = [k for k in src.states if k in tgt.states]
+    for kind in common_kinds:
+        sdims, tdims = src.states[kind].dims, tgt.states[kind].dims
+        for i, (sd, td) in enumerate(zip(sdims, tdims)):
+            if sd.parts is None and td.parts is None:
+                continue
+            if sd.parts != td.parts:
+                return ParamTransform(
+                    name, TransformClass.CONSOLIDATE,
+                    f"dim {i}: fused sub-fragment structure changed",
+                )
+            ns, nt = sd.num_shards(src_mesh), td.num_shards(tgt_mesh)
+            if ns != nt:
+                return ParamTransform(
+                    name, TransformClass.CONSOLIDATE,
+                    f"fused dim {i} repartitioned ({ns} -> {nt} shards)",
+                )
+    if "moe_expert" in (src.kind, tgt.kind):
+        for kind in common_kinds:
+            if _sharded_dims(src.states[kind]) != _sharded_dims(tgt.states[kind]):
+                return ParamTransform(
+                    name, TransformClass.CONSOLIDATE,
+                    "MoE expert re-grouping (sharded dims moved)",
+                )
+    if src_mesh == tgt_mesh and src == tgt:
+        return ParamTransform(name, TransformClass.IDENTITY, "layout unchanged")
+    return ParamTransform(name, TransformClass.RESLICE, "pure re-slicing")
 
 
 def uniform_param_spec(

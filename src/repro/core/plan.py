@@ -2,25 +2,34 @@
 
 The paper's key efficiency claim is that UCP conversion is lazy: when the
 Target parallelism equals the Source, resume takes the fast path (each rank
-reads its own shard files back, zero transformation); only when the layout
-actually changed does the Source get converted to atoms and re-fragmented.
+reads its own shard files back, zero transformation).  When the layout *did*
+change, the pattern-based planner goes one step further than the paper's
+convert-then-Load workflow: it classifies every parameter's Source→Target
+transform (:func:`repro.core.patterns.classify_transform`) and streams the
+checkpoint directly into the Target layout — no intermediate UCP checkpoint
+is ever written.
 
-``plan_resume`` encodes that decision:
+``plan_resume`` encodes the ladder:
 
-    Source layout == Target layout  →  DIRECT   (per-rank shard reads)
-    otherwise                       →  VIA_UCP  (convert once, then Load)
+    Source layout == Target layout  →  DIRECT          (per-rank shard reads)
+    layout changed, same param set  →  RESHARD_STREAM  (stream fragments;
+                                       consolidate the few params that need
+                                       it *in memory*, per the plan table)
+    parameter set changed           →  VIA_UCP         (convert once, Load)
 
 Layout equality is structural — mesh axes/sizes, per-state dims, runtime
 shapes, dtypes — not object identity, so e.g. a restart on identical
 hardware after a crash is always DIRECT even though every Python object was
-rebuilt from scratch.
+rebuilt from scratch.  ``VIA_UCP`` also remains the fallback when a stream
+restore fails mid-flight (see ``CheckpointManager.restore``) and the
+explicit export path (``convert_to_ucp`` / ``CheckpointManager.export_ucp``).
 
 The hot in-memory tier (``repro.hot``) sits *above* this ladder: when a
 recent peer-replicated snapshot survives in host memory, recovery takes
-``HOT_DIRECT`` (identical layout) or ``HOT_RESHARD`` (region reads unioned
-from surviving in-memory fragments) and never touches disk; the planner in
-``repro.hot.recovery`` falls through to the two disk modes here when the
-surviving replicas cannot cover the state (see DESIGN.md §5).
+``HOT_DIRECT`` (identical layout) or ``HOT_RESHARD`` (the same streaming
+plan table, pointed at surviving in-memory fragments) and never touches
+disk; the planner in ``repro.hot.recovery`` falls through to the disk modes
+here when the surviving replicas cannot cover the state (see DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -34,17 +43,26 @@ import numpy as np
 from .dist_ckpt import DistCheckpoint, DistManifest
 from .layout import MeshSpec
 from .ops import LoadPlan, gen_ucp_metadata
-from .patterns import ParamSpec, StateKind
+from .patterns import ParamSpec, ParamTransform, StateKind, TransformClass, classify_transform
 from .tensor_io import resolve_dtype
 
-__all__ = ["ResumeMode", "TargetSpec", "ResumePlan", "plan_resume", "direct_load_shard"]
+__all__ = [
+    "ResumeMode",
+    "TargetSpec",
+    "ResumePlan",
+    "plan_resume",
+    "stream_transforms",
+    "unstreamable_reason",
+    "direct_load_shard",
+]
 
 
 class ResumeMode(str, enum.Enum):
     HOT_DIRECT = "hot_direct"    # in-memory snapshot, identical layout
     HOT_RESHARD = "hot_reshard"  # in-memory snapshot, resharded on the fly
     DIRECT = "direct"     # same layout: per-rank shard reads, no conversion
-    VIA_UCP = "via_ucp"   # layout changed: convert to atoms, then UCP Load
+    RESHARD_STREAM = "reshard_stream"  # stream fragments into the new layout
+    VIA_UCP = "via_ucp"   # param set changed / stream failed: atoms, then Load
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,12 +105,76 @@ def layouts_equal(source: DistManifest, target: TargetSpec) -> bool:
 class ResumePlan:
     mode: ResumeMode
     source_step: int
-    load_plan: LoadPlan  # target-side geometry (valid for both modes)
+    load_plan: LoadPlan  # target-side geometry (valid for every mode)
     reason: str = ""
+    # Per-param plan table (RESHARD_STREAM only): how each parameter gets
+    # from the Source layout to the Target layout.
+    transforms: dict[str, ParamTransform] | None = None
+
+    @property
+    def consolidate_params(self) -> list[str]:
+        if not self.transforms:
+            return []
+        return [
+            n for n, t in self.transforms.items()
+            if t.cls is TransformClass.CONSOLIDATE
+        ]
 
 
-def plan_resume(source: DistManifest, target: TargetSpec) -> ResumePlan:
-    """Choose the resume path and precompute the Target geometry."""
+def unstreamable_reason(source: DistManifest, target: TargetSpec) -> str | None:
+    """Why a streaming reshard cannot serve ``target`` (None == it can).
+
+    Streaming requires the same parameter identities: equal parameter
+    sets, per-param equal *logical* shapes, equal state-kind sets and an
+    unchanged average marker.  A genuinely different tensor (e.g. a
+    logical vocab change hiding inside unchanged runtime padding) has no
+    fragment-level transform — those route VIA_UCP, whose load plan
+    rejects them loudly instead of serving padding bytes as data.
+    """
+    if set(source.params) != set(target.params):
+        return (
+            "parameter set changed: "
+            f"source-only={sorted(set(source.params) - set(target.params))[:3]} "
+            f"target-only={sorted(set(target.params) - set(source.params))[:3]}"
+        )
+    for name, src in source.params.items():
+        tgt = target.params[name]
+        if tuple(src.logical_shape) != tuple(tgt.logical_shape):
+            return (
+                f"{name}: logical shape {tuple(src.logical_shape)} -> "
+                f"{tuple(tgt.logical_shape)}"
+            )
+        if set(src.states) != set(tgt.states):
+            return f"{name}: state kinds changed"
+        if src.average != tgt.average:
+            return f"{name}: average-param marker changed"
+    return None
+
+
+def stream_transforms(source: DistManifest, target: TargetSpec) -> dict[str, ParamTransform]:
+    """The per-param plan table for a streaming reshard.
+
+    Raises when the target is not streamable at all (see
+    :func:`unstreamable_reason`) — those cases route VIA_UCP.
+    """
+    why_not = unstreamable_reason(source, target)
+    if why_not is not None:
+        raise ValueError(f"target is not streamable: {why_not}")
+    return {
+        n: classify_transform(source.params[n], target.params[n],
+                              source.mesh, target.mesh)
+        for n in target.params
+    }
+
+
+def plan_resume(
+    source: DistManifest, target: TargetSpec, *, allow_stream: bool = True
+) -> ResumePlan:
+    """Choose the resume path and precompute the Target geometry.
+
+    ``allow_stream=False`` restores the paper's convert-then-Load workflow
+    for any layout change (used to benchmark streaming against it).
+    """
     plan = gen_ucp_metadata(dict(target.params), target.mesh)
     if layouts_equal(source, target):
         return ResumePlan(
@@ -114,6 +196,25 @@ def plan_resume(source: DistManifest, target: TargetSpec) -> ResumePlan:
     ]
     if changed:
         diffs.append(f"{len(changed)} param layouts changed (e.g. {changed[0]})")
+    why_not_stream = unstreamable_reason(source, target)
+    if allow_stream and why_not_stream is None:
+        transforms = stream_transforms(source, target)
+        n_cons = sum(
+            1 for t in transforms.values() if t.cls is TransformClass.CONSOLIDATE
+        )
+        diffs.append(
+            f"streaming {len(transforms) - n_cons} params, "
+            f"consolidating {n_cons} in memory"
+        )
+        return ResumePlan(
+            mode=ResumeMode.RESHARD_STREAM,
+            source_step=source.step,
+            load_plan=plan,
+            reason="; ".join(diffs),
+            transforms=transforms,
+        )
+    if why_not_stream is not None:
+        diffs.append(f"not streamable ({why_not_stream})")
     return ResumePlan(
         mode=ResumeMode.VIA_UCP,
         source_step=source.step,

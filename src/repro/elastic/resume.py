@@ -15,8 +15,10 @@ Two recovery regimes:
   replicas when they still cover the state, disk otherwise.  No disk read
   in the common case (the paper's negligible-cost resume, one tier up).
 * **process restarted** (job rescheduled from scratch): host memory is
-  gone, so ``init_or_restore`` lands on the disk ladder — DIRECT or
-  VIA_UCP, exactly the paper's workflow.
+  gone, so ``init_or_restore`` lands on the disk ladder — DIRECT when the
+  layout matches, otherwise RESHARD_STREAM (source fragments streamed
+  straight into the new layout, zero intermediate bytes on disk), with
+  VIA_UCP (the paper's convert-then-Load workflow) as the fallback.
 
 On real hardware, failure detection comes from the platform (missing
 heartbeats / NCCL-equivalent timeouts / preemption notices); in this

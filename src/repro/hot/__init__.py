@@ -7,7 +7,7 @@ ranks), every Nth snapshot is drained to a durable
 :class:`~repro.core.dist_ckpt.DistCheckpoint` in the background, and
 recovery walks the tier ladder
 
-    HOT_DIRECT → HOT_RESHARD → DIRECT → VIA_UCP
+    HOT_DIRECT → HOT_RESHARD → DIRECT → RESHARD_STREAM → VIA_UCP
 
 serving from surviving in-memory replicas when it can and falling
 through to disk when it cannot (see DESIGN.md §5 and

@@ -2,17 +2,21 @@
 
 The recovery ladder (DESIGN.md §5), top = cheapest:
 
-    HOT_DIRECT   surviving in-memory snapshot, layout unchanged — each
-                 device region coincides with one resident fragment; no
-                 disk I/O, no transformation.
-    HOT_RESHARD  surviving in-memory snapshot, layout changed — regions
-                 are unioned from resident fragments through the same
-                 indexed read path the disk direct-reshard uses; still no
-                 disk I/O.
-    DIRECT       disk checkpoint, layout unchanged (per-rank shard reads).
-    VIA_UCP      disk checkpoint, layout changed (convert to atoms once,
-                 then Load) — handles everything the hot tier cannot,
-                 e.g. a changed parameter set or logical shapes.
+    HOT_DIRECT      surviving in-memory snapshot, layout unchanged — each
+                    device region coincides with one resident fragment; no
+                    disk I/O, no transformation.
+    HOT_RESHARD     surviving in-memory snapshot, layout changed — the
+                    streaming plan table classifies every parameter and
+                    regions are served from resident fragments (with the
+                    few consolidation-class params assembled in memory);
+                    still no disk I/O.
+    DIRECT          disk checkpoint, layout unchanged (per-rank reads).
+    RESHARD_STREAM  disk checkpoint, layout changed — same streaming plan
+                    table pointed at shard files; no intermediate
+                    checkpoint is written.
+    VIA_UCP         disk checkpoint, convert to atoms once then Load —
+                    the fallback for what streaming cannot serve (changed
+                    parameter set) or a stream failure mid-flight.
 
 ``plan_hot_recovery`` decides whether either hot tier applies: the newest
 snapshot that (a) is at least as fresh as the best disk checkpoint,
@@ -26,7 +30,13 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.plan import ResumeMode, TargetSpec, layouts_equal
+from repro.core.plan import (
+    ResumeMode,
+    TargetSpec,
+    layouts_equal,
+    stream_transforms,
+    unstreamable_reason,
+)
 from repro.core.tensor_io import IntegrityError
 
 from .snapshot import HotSnapshot, HotTier
@@ -50,24 +60,16 @@ class HotRecoveryPlan:
 def reshard_compatible(manifest, target: TargetSpec) -> str | None:
     """Can HOT_RESHARD serve ``target`` from this snapshot?  None == yes.
 
-    The indexed region-read path serves *runtime-coordinate* regions, so
-    the target may change mesh, fragmentation, replication and dtype —
-    but not the parameter set or the runtime/logical shapes (those need
-    the UCP atom transformation: StripPadding / re-pad / re-average).
+    The streaming restore serves *runtime-coordinate* regions and
+    consolidates consolidation-class params (padding changes, fused
+    repartitioning, replica averaging) in memory, so the target may change
+    mesh, fragmentation, replication, dtype and even runtime padding — but
+    not the parameter set or the logical shapes (a genuinely different
+    tensor cannot be transformed out of this snapshot).
     """
-    if set(manifest.params) != set(target.params):
-        return "parameter set changed"
-    for name, src in manifest.params.items():
-        tgt = target.params[name]
-        if tuple(src.runtime_shape) != tuple(tgt.runtime_shape):
-            return f"{name}: runtime shape {src.runtime_shape} -> {tgt.runtime_shape}"
-        if tuple(src.logical_shape) != tuple(tgt.logical_shape):
-            return f"{name}: logical shape {src.logical_shape} -> {tgt.logical_shape}"
-        if src.average != tgt.average:
-            return f"{name}: average-param marker changed"
-        if set(src.states) != set(tgt.states):
-            return f"{name}: state kinds changed"
-    return None
+    # One predicate governs both planners: what the disk stream planner
+    # cannot serve, the hot tier cannot either (same restore code path).
+    return unstreamable_reason(manifest, target)
 
 
 def plan_hot_recovery(
@@ -126,12 +128,18 @@ def state_from_hot(
 ):
     """Restore a TrainState from an in-memory snapshot (no disk I/O).
 
+    Layout unchanged → pure fragment reads (``state_from_source``);
+    otherwise the snapshot streams through the same per-param plan table
+    the disk ``RESHARD_STREAM`` tier uses (``state_from_stream``) —
+    consolidation-class params are assembled in memory from the surviving
+    replicas, everything else is indexed region reads.
+
     ``verify=True`` re-digests every surviving fragment against its
     capture-time digest first — a replica that rotted in host memory
     raises :class:`IntegrityError` instead of silently resuming from
     corrupt state.
     """
-    from repro.ckpt.restore import state_from_source
+    from repro.ckpt.restore import state_from_source, state_from_stream
 
     if verify:
         problems = snapshot.verify()
@@ -140,4 +148,10 @@ def state_from_hot(
                 f"hot snapshot @ step {snapshot.step} failed verification: "
                 + "; ".join(problems[:5])
             )
-    return state_from_source(snapshot, plan, jmesh, stats, engine=engine)
+    target = TargetSpec(plan.mesh, plan.param_specs)
+    if layouts_equal(snapshot.manifest, target):
+        # HOT_DIRECT: bit-exact fragment reads — params_to_average replicas
+        # keep their divergent per-replica copies, padding bytes included.
+        return state_from_source(snapshot, plan, jmesh, stats, engine=engine)
+    transforms = stream_transforms(snapshot.manifest, target)
+    return state_from_stream(snapshot, plan, jmesh, transforms, stats, engine=engine)

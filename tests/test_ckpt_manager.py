@@ -99,7 +99,7 @@ def test_restore_prefers_requested_step(setup):
     assert info.step == 10
 
 
-def test_via_ucp_restore_and_conversion_cache(setup):
+def test_reshard_stream_restore_writes_nothing(setup):
     tmp, cfg, lm, plan, state, jmesh = setup
     mgr = CheckpointManager(tmp / "ck", plan, async_save=False)
     mgr.save(state, 10)
@@ -108,14 +108,54 @@ def test_via_ucp_restore_and_conversion_cache(setup):
     mesh2 = MeshSpec.from_dict({"data": 1, "model": 1})
     lm2 = build_model(cfg, vocab_multiple=vocab_multiple(parallel2, mesh2))
     plan2 = make_plan(cfg, lm2.registry, parallel2, mesh2)
+    before = sorted(p for p in (tmp / "ck").rglob("*") if p.is_file())
     restored, info = mgr.restore(jmesh, target_plan=plan2)
+    assert info.mode == ResumeMode.RESHARD_STREAM
+    assert info.convert_stats is None  # nothing was converted
+    # zero intermediate bytes: the checkpoint directory is untouched
+    assert before == sorted(p for p in (tmp / "ck").rglob("*") if p.is_file())
+    _state_equal(state, restored)
+
+
+def test_via_ucp_restore_and_conversion_cache(setup):
+    tmp, cfg, lm, plan, state, jmesh = setup
+    mgr = CheckpointManager(tmp / "ck", plan, async_save=False)
+    mgr.save(state, 10)
+    parallel2 = ParallelismConfig(zero=1, fsdp=False)
+    mesh2 = MeshSpec.from_dict({"data": 1, "model": 1})
+    lm2 = build_model(cfg, vocab_multiple=vocab_multiple(parallel2, mesh2))
+    plan2 = make_plan(cfg, lm2.registry, parallel2, mesh2)
+    # the paper's convert-then-Load workflow stays available when forced
+    restored, info = mgr.restore(
+        jmesh, target_plan=plan2, force_mode=ResumeMode.VIA_UCP
+    )
     assert info.mode == ResumeMode.VIA_UCP
     assert info.convert_stats is not None  # converted this time
     _state_equal(state, restored)
     # second restore reuses the cached UCP directory (hub property)
-    restored2, info2 = mgr.restore(jmesh, target_plan=plan2)
+    restored2, info2 = mgr.restore(
+        jmesh, target_plan=plan2, force_mode=ResumeMode.VIA_UCP
+    )
     assert info2.convert_stats is None
     _state_equal(state, restored2)
+
+
+def test_export_ucp_is_explicit_and_cached(setup):
+    tmp, cfg, lm, plan, state, jmesh = setup
+    mgr = CheckpointManager(tmp / "ck", plan, async_save=False)
+    mgr.save(state, 10)
+    ucp, cstats = mgr.export_ucp()
+    assert cstats is not None and cstats.params > 0
+    assert (Path(str(mgr.step_dir(10)) + ".ucp") / "COMMIT").exists()
+    ucp2, cstats2 = mgr.export_ucp(10)
+    assert cstats2 is None  # cache hit
+    # a forced-DIRECT restore onto a different layout must refuse
+    parallel2 = ParallelismConfig(zero=1, fsdp=False)
+    mesh2 = MeshSpec.from_dict({"data": 1, "model": 1})
+    lm2 = build_model(cfg, vocab_multiple=vocab_multiple(parallel2, mesh2))
+    plan2 = make_plan(cfg, lm2.registry, parallel2, mesh2)
+    with pytest.raises(ValueError, match="cannot force DIRECT"):
+        mgr.restore(jmesh, target_plan=plan2, force_mode=ResumeMode.DIRECT)
 
 
 def test_async_saver_surfaces_errors():

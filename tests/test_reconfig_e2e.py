@@ -77,10 +77,10 @@ def source_ckpt(tmp_path_factory):
 # (host devices, mesh, extra flags, expected resume mode)
 TARGETS = [
     (4, "data=2,model=2", [], "direct"),                      # same layout
-    (4, "data=4,model=1", [], "via_ucp"),                     # TP→DP
-    (2, "data=1,model=2", ["--zero", "1", "--no-fsdp"], "via_ucp"),  # shrink + ZeRO-1
-    (8, "data=2,model=4", [], "via_ucp"),                     # grow to 8 chips
-    (8, "pipe=2,data=2,model=2", [], "via_ucp"),              # add PP stage axis
+    (4, "data=4,model=1", [], "reshard_stream"),              # TP→DP
+    (2, "data=1,model=2", ["--zero", "1", "--no-fsdp"], "reshard_stream"),  # shrink + ZeRO-1
+    (8, "data=2,model=4", [], "reshard_stream"),              # grow to 8 chips
+    (8, "pipe=2,data=2,model=2", [], "reshard_stream"),       # add PP stage axis
 ]
 
 
@@ -144,6 +144,6 @@ def test_moe_arch_reconfig(tmp_path):
     assert out.returncode == 0, out.stderr[-2000:]
     recs = [json.loads(l) for l in out.stdout.splitlines() if l.startswith("{")]
     restored = [r for r in recs if r.get("event") == "restored"]
-    assert restored and restored[0]["mode"] == "via_ucp"
+    assert restored and restored[0]["mode"] == "reshard_stream"
     losses = [r["loss"] for r in recs if r.get("event") == "step"]
     assert losses and all(l == l and l < 20 for l in losses)

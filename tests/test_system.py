@@ -52,10 +52,11 @@ def test_resume_under_new_zero_stage_matches_losses(tmp_path):
     # continue WITHOUT reconfig to get reference losses for steps 9..10
     state, ref = t.run(state, 8, 2)
 
-    # new trainer with different ZeRO staging resumes from step 8 via UCP
+    # new trainer with different ZeRO staging resumes from step 8 by
+    # streaming the checkpoint straight into the new layout
     t2 = _mk_trainer(tmp_path, zero=1, fsdp=False)
     state2, info2 = t2.init_or_restore()
-    assert info2 is not None and info2.mode == ResumeMode.VIA_UCP
+    assert info2 is not None and info2.mode == ResumeMode.RESHARD_STREAM
     state2, hist_b = t2.run(state2, 8, 2)
     for r, b in zip(ref, hist_b):
         assert abs(r["loss"] - b["loss"]) < 2e-2

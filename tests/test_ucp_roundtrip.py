@@ -221,7 +221,10 @@ def test_pp_stage_reconfiguration(tmp_path):
     state = {"blk.w": {k: rng.normal(size=(8, 6, 4)).astype(np.float32) for k in STATE_KINDS}}
     ck = _save(tmp_path / "d", src_mesh, {"blk.w": spec_s}, state)
     rp = plan_resume(ck.manifest, TargetSpec(tgt_mesh, {"blk.w": spec_t}))
-    assert rp.mode == ResumeMode.VIA_UCP
+    assert rp.mode == ResumeMode.RESHARD_STREAM  # PP regroup is pure re-slicing
+    assert plan_resume(
+        ck.manifest, TargetSpec(tgt_mesh, {"blk.w": spec_t}), allow_stream=False
+    ).mode == ResumeMode.VIA_UCP
     ucp, _ = convert_to_ucp(ck, str(tmp_path / "u"), workers=1)
     got = _reassemble_target(ucp, spec_t, StateKind.EXP_AVG, tgt_mesh)
     np.testing.assert_array_equal(got, state["blk.w"][StateKind.EXP_AVG])
