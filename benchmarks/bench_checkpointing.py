@@ -13,6 +13,12 @@
                                recovery (HOT_DIRECT / HOT_RESHARD, incl.
                                after simulated rank failure) vs the disk
                                rows at the same model size.
+* ``bench_delta``            — beyond-paper: incremental (delta) saves on
+                               an MoE-style sparse-update workload (<30%
+                               of fragments change per save) vs the full
+                               save of the same state, plus restore from a
+                               K-deep delta chain (direct + TP/DP reshard)
+                               asserted bit-identical to the full save.
 """
 
 from __future__ import annotations
@@ -384,6 +390,131 @@ def bench_hot_tier(sizes=("small", "medium")) -> list[tuple[str, float, str]]:
         rows.append((f"hot_recover_failed_{size}", t_hot_failed * 1e6,
                      f"mode=hot_reshard;"
                      f"vs_disk={t_disk_reshard/t_hot_failed:.2f}x"))
+    return rows
+
+
+def bench_delta(sizes=("small", "medium")) -> list[tuple[str, float, str]]:
+    """Incremental saves: Checkmate-style per-iteration cadence is only
+    affordable when the steady-state save writes far less than a snapshot.
+
+    Workload: an MoE-style sparse update — under 30% of parameters change
+    between saves (frozen embeddings / untouched experts).  Rows:
+
+    * ``delta_full_save_{size}`` — a full save of the mutated state (the
+      baseline the ordering check compares against, measured in-process);
+    * ``delta_save_{size}``      — the same state saved as a delta against
+      the previous commit; asserts proportional bytes and (at medium)
+      >= 2x speedup;
+    * ``chain_restore_{size}``   — restore from the tip of a K-deep chain,
+      asserted bit-identical to the full save, including across a TP/DP
+      reshard (RESHARD_STREAM from the chain).
+    """
+    rows = []
+    mesh = default_mesh(4, 2)
+    tgt_mesh = default_mesh(2, 2)
+    parallel = ParallelismConfig()
+    jmesh = jax.make_mesh((1, 1), ("data", "model"))
+    for size in sizes:
+        cfg, lm, plan, state = build_sized(size, mesh, parallel)
+        plan_tgt = make_plan(cfg, lm.registry, parallel, tgt_mesh)
+        snap = snapshot_state(state)
+        # sparse update: mutate the fp32 weights of <30% of params (sorted
+        # order keeps the subset deterministic); moments stay untouched,
+        # as they do for frozen/unrouted subtrees in a real MoE fine-tune.
+        names = sorted(snap)
+        changed = names[: max(1, int(len(names) * 0.25))]
+        from repro.core.patterns import StateKind
+
+        def mutate(s):
+            """One sparse-update step: +1.0 on the changed subset's fp32."""
+            return {
+                n: {
+                    k: (a + 1.0 if n in changed and k == StateKind.FP32 else a)
+                    for k, a in kinds.items()
+                }
+                for n, kinds in s.items()
+            }
+
+        snap2 = mutate(snap)
+        with bench_tmpdir() as tmp:
+            write_distributed(snap, plan, 1, f"{tmp}/step_00000001",
+                              workers=SAVE_WORKERS)
+            base = DistCheckpoint.open(f"{tmp}/step_00000001")
+            full_bytes = base.total_bytes()
+            i = [0]
+
+            def save_full():
+                i[0] += 1
+                write_distributed(snap2, plan, 100 + i[0],
+                                  f"{tmp}/full{i[0]}", workers=SAVE_WORKERS)
+
+            t_full = _timeit(save_full)
+
+            def save_delta():
+                i[0] += 1
+                return write_distributed(
+                    snap2, plan, 100 + i[0], f"{tmp}/step_{100 + i[0]:08d}",
+                    save_mode="delta", base=base, workers=SAVE_WORKERS,
+                )
+
+            t_delta = _timeit(save_delta)
+            res = save_delta()
+            assert res.mode == "delta" and res.shards_inherited > 0
+            delta_bytes = res.bytes_written
+            frac = delta_bytes / full_bytes
+            assert frac < 0.35, (
+                f"delta wrote {frac:.2f} of the full bytes on a <30% -changed "
+                "workload — diffing is not skipping unchanged shards"
+            )
+            if size == "medium":
+                assert t_full / t_delta >= 2.0, (
+                    f"delta save {t_delta:.3f}s not >=2x faster than full "
+                    f"{t_full:.3f}s at medium"
+                )
+
+            # K-deep chain: keep mutating the same subset, then restore the
+            # tip and compare against a full save of the final state.
+            eng = CheckpointEngine(
+                workers=PARALLEL_WORKERS, handle_cache_bytes=2 << 30
+            )
+            snap_k = snap2
+            prev = base
+            K = 4
+            for j in range(K):
+                snap_k = mutate(snap_k)
+                r = write_distributed(
+                    snap_k, plan, 200 + j, f"{tmp}/step_{200 + j:08d}",
+                    save_mode="delta", base=prev, workers=SAVE_WORKERS,
+                )
+                assert r.mode == "delta", r.fallback_reason
+                prev = DistCheckpoint.open(f"{tmp}/step_{200 + j:08d}")
+            tip = prev
+            write_distributed(snap_k, plan, 999, f"{tmp}/step_full_tip",
+                              workers=SAVE_WORKERS)
+            full_tip = DistCheckpoint.open(f"{tmp}/step_full_tip")
+
+            t_chain = _timeit(
+                lambda: state_from_dist(tip, plan, jmesh, engine=eng), n=2
+            )
+            a = state_from_dist(tip, plan, jmesh, engine=eng)
+            b = state_from_dist(full_tip, plan, jmesh, engine=eng)
+            assert _state_tensors_equal(a, b), (
+                "chain restore diverged from the equivalent full save"
+            )
+            # bit-identity across a TP/DP reshard served from the chain
+            a2 = state_from_dist(tip, plan_tgt, jmesh, engine=eng)
+            b2 = state_from_dist(full_tip, plan_tgt, jmesh, engine=eng)
+            assert _state_tensors_equal(a2, b2), (
+                "chain reshard restore diverged from the full save"
+            )
+            del a, b, a2, b2
+            eng.close()
+        rows.append((f"delta_full_save_{size}", t_full * 1e6,
+                     f"{full_bytes/1e6/t_full:.0f}MB/s"))
+        rows.append((f"delta_save_{size}", t_delta * 1e6,
+                     f"bytes_frac={frac:.2f};speedup={t_full/t_delta:.2f}x"))
+        rows.append((f"chain_restore_{size}", t_chain * 1e6,
+                     f"depth={K};bit_identical=1"))
     return rows
 
 

@@ -38,10 +38,11 @@ def main() -> None:
         "save_cost": B.bench_save_cost,               # paper Fig. 11
         "transform_load": B.bench_transform_load,     # paper Fig. 12
         "hot_tier": B.bench_hot_tier,                 # beyond-paper hot tier
+        "delta": B.bench_delta,                       # beyond-paper delta saves
         "conversion_scaling": B.bench_conversion_scaling,  # §3.2 Table 2
         "correctness": B.bench_correctness,           # Fig. 6/7, Table 3
     }
-    sized = {"save_cost", "transform_load", "hot_tier"}  # accept sizes=...
+    sized = {"save_cost", "transform_load", "hot_tier", "delta"}  # accept sizes=...
     sizes = tuple(s for s in args.sizes.split(",") if s)
     only = {s for s in args.only.split(",") if s}
     print("name,us_per_call,derived")

@@ -27,7 +27,10 @@ process:
 
 * hot-tier rows must stay faster than the matching disk rows;
 * the streaming reshard must stay faster than the VIA_UCP convert+load
-  path it replaced.
+  path it replaced;
+* the delta save must stay faster than the full save of the same state
+  (it writes a fraction of the bytes; if it isn't faster, the diff is
+  writing shards it should have inherited).
 """
 
 from __future__ import annotations
@@ -59,6 +62,7 @@ ORDERING_PAIRS = [
         ("hot_recover_failed", "disk_restore_reshard"),
         ("reshard_stream", "via_ucp_total"),
         ("reshard_stream_mixed", "via_ucp_total"),
+        ("delta_save", "delta_full_save"),
     )
 ]
 

@@ -33,6 +33,15 @@ if [[ "${1:-}" == "--fast" ]]; then
     PYTEST_ARGS+=(-m "not slow")
 fi
 
+stage="tracked-bytecode-guard"
+# Committed .pyc files churn on every run and bloat diffs; they were purged
+# once (git rm -r --cached) and must never come back.
+if git ls-files | grep -E '(^|/)__pycache__/|\.py[cod]$' >/dev/null; then
+    echo "ci.sh: tracked __pycache__/.pyc entries found:" >&2
+    git ls-files | grep -E '(^|/)__pycache__/|\.py[cod]$' >&2
+    exit 1
+fi
+
 stage="import-smoke"
 python - <<'PY'
 import importlib
@@ -62,7 +71,7 @@ python -m pytest -x -q "${PYTEST_ARGS[@]}" "$@"
 
 stage="bench-smoke"
 smoke_json="$(mktemp /tmp/bench_smoke.XXXXXX.json)"
-python -m benchmarks.run --only save_cost,hot_tier --sizes small \
+python -m benchmarks.run --only save_cost,hot_tier,delta --sizes small \
     --json "$smoke_json" >/dev/null
 python - "$smoke_json" <<'PY'
 import json
@@ -75,6 +84,8 @@ assert all(r["derived"] != "ERROR" for r in rows), f"benchmark smoke errored: {r
 names = {r["name"] for r in rows}
 assert any(n.startswith("save_parallel_") for n in names), names
 assert any(n.startswith("hot_capture_") for n in names), names
+assert any(n.startswith("delta_save_") for n in names), names
+assert any(n.startswith("chain_restore_") for n in names), names
 print(f"bench-smoke: {len(rows)} rows ok")
 PY
 

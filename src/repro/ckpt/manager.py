@@ -2,7 +2,13 @@
 
 Responsibilities:
 
-* periodic saves (sync or async/overlapped), atomic commit, keep-last-k GC;
+* periodic saves (sync or async/overlapped), atomic commit, keep-last-k GC
+  (delta-aware: never collects a base a live delta references; in-flight
+  save directories are never treated as wreckage);
+* incremental saves (``save_mode="delta"``): steady-state disk saves write
+  only the shards whose content digest changed since the previous commit,
+  with every ``full_interval``-th save a full rebase bounding chain depth
+  (the hot drainer promotes snapshots through the same diff);
 * the hot in-memory tier (``hot_interval``): per-``hot_interval``-step
   peer-replicated host snapshots with every Nth promoted to disk in the
   background (``disk_interval``), see :mod:`repro.hot`;
@@ -28,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import shutil
+import threading
 import time
 from pathlib import Path
 from typing import Any, Mapping
@@ -75,6 +82,8 @@ class CheckpointManager:
         async_save: bool = True,
         max_pending_saves: int = 2,
         io_workers: int | None = None,
+        save_mode: str = "dedup",
+        full_interval: int = 8,
         config_fingerprint: Mapping[str, Any] | None = None,
     ):
         """``io_workers``: width of the checkpoint I/O pool shared by the
@@ -90,7 +99,22 @@ class CheckpointManager:
         defaults to ``save_interval``, which stays the disk cadence when
         the hot tier is off).  ``hot_replication`` extra copies per
         fragment, ``hot_max_snapshots`` / ``hot_max_bytes`` bound the ring.
+
+        Delta policy: ``save_mode="delta"`` makes the steady-state disk
+        save (direct or hot-promoted) an incremental one — only shards
+        whose content digest changed since the previous committed step are
+        written; the rest are manifest references into the chain.  Every
+        ``full_interval``-th disk save is forced full (a *rebase*), which
+        bounds chain length and lets GC collect old chains.  ``gc()`` never
+        removes a step that a live delta references.  ``"dedup"`` /
+        ``"all"`` keep their previous meaning (every save full).
         """
+        if save_mode not in ("dedup", "all", "delta"):
+            raise ValueError(
+                f"save_mode must be 'dedup', 'all' or 'delta', got {save_mode!r}"
+            )
+        if full_interval < 1:
+            raise ValueError(f"full_interval must be >= 1, got {full_interval}")
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.plan = plan
@@ -98,6 +122,19 @@ class CheckpointManager:
         self.save_interval = save_interval
         self.disk_interval = disk_interval if disk_interval is not None else save_interval
         self.hot_interval = hot_interval
+        self.save_mode = save_mode
+        self.full_interval = full_interval
+        self._disk_save_seq = 0  # disk-save counter driving the rebase cadence
+        # Chain pins: save root -> the base chain directories an in-flight
+        # delta resolved (registered by the base loader on the writer
+        # thread, pruned by gc() once the save leaves the pending set).
+        # Closes the window where gc() could collect a base between a
+        # queued delta's base resolution and its commit.
+        self._pin_lock = threading.Lock()
+        self._pinned_chains: dict[Path, set[Path]] = {}
+        # Committed manifests are immutable: memoize referenced_steps per
+        # step so gc() doesn't re-parse keep_last manifests on every save.
+        self._refs_cache: dict[int, set[int]] = {}
         self.config_fingerprint = dict(config_fingerprint or {})
         self.engine = (
             CheckpointEngine(workers=io_workers)
@@ -117,6 +154,10 @@ class CheckpointManager:
                 max_snapshots=hot_max_snapshots,
                 max_bytes=hot_max_bytes,
                 engine=self.engine,
+                # "all" must capture the full per-replica write set or the
+                # promoted disk checkpoints would silently be dedup'd;
+                # "delta" captures the dedup set (deltas require it).
+                save_mode="all" if save_mode == "all" else "dedup",
             )
             self._drainer = HotDrainer(
                 every=max(1, self.disk_interval // hot_interval),
@@ -137,10 +178,57 @@ class CheckpointManager:
             return step % self.hot_interval == 0
         return step % self.save_interval == 0
 
+    def _base_loader(self, step: int):
+        """A callable resolving the delta base for a save of ``step`` —
+        evaluated on the *writing* thread, so a queued delta always diffs
+        against the newest step that actually committed before it runs.
+
+        The resolved base's chain is *pinned* (``_pinned_chains``) before
+        the loader returns, and ``gc()`` refuses to collect pinned
+        directories until the save leaves the in-flight set.  Resolution
+        runs entirely under ``_pin_lock`` — the same lock gc() holds
+        around each committed-step deletion — so the loader either pins
+        the base before gc can consider it (deletion skipped) or observes
+        the already-deleted state and rebases; there is no window where a
+        half-deleted base can be resolved (the saver's pre-commit chain
+        check remains the loud last-resort backstop)."""
+        save_root = self.step_dir(step)
+
+        def load() -> DistCheckpoint | None:
+            with self._pin_lock:
+                older = [s for s in self.steps() if s < step]
+                if not older:
+                    return None
+                try:
+                    base = DistCheckpoint.open(self.step_dir(older[-1]))
+                except (OSError, ValueError, KeyError):
+                    return None  # unreadable base: rebase to a full save
+                self._pinned_chains[save_root] = set(base.chain_roots())
+            return base
+
+        return load
+
+    def _next_save_kw(self, step: int) -> dict[str, Any]:
+        """Per-save delta policy: ``save_mode``/``base`` kwargs for the
+        next disk save, advancing the rebase cadence (every
+        ``full_interval``-th disk save is full)."""
+        if self.save_mode == "all":
+            return {"save_mode": "all"}
+        if self.save_mode != "delta":
+            return {}
+        seq = self._disk_save_seq
+        self._disk_save_seq += 1
+        if seq % self.full_interval == 0:
+            return {}  # forced rebase: a plain full save
+        return {"save_mode": "delta", "base": self._base_loader(step)}
+
     def save(
         self, state: TrainState, step: int, *, scalars: Mapping[str, Any] | None = None,
         block: bool = False,
     ) -> None:
+        # A re-save into an existing step replaces its manifest: the memoized
+        # reference set is stale the moment the save starts.
+        self._refs_cache.pop(step, None)
         if self.hot is not None and step % self.hot_interval == 0:
             snap = snapshot_state(state)
             hs, _ = self.hot.capture(
@@ -148,7 +236,8 @@ class CheckpointManager:
                 scalars=dict(scalars or {}),
                 config_fingerprint=self.config_fingerprint,
             )
-            self._drainer.maybe_drain(hs, self.step_dir(step))
+            drain_kw = self._next_save_kw(step) if self._drainer.next_drains else {}
+            self._drainer.maybe_drain(hs, self.step_dir(step), **drain_kw)
             if block:
                 self._drainer.wait()
             self.gc()
@@ -158,6 +247,7 @@ class CheckpointManager:
             config_fingerprint=self.config_fingerprint,
             engine=self.engine,
         )
+        kw.update(self._next_save_kw(step))
         if self._async is not None and not block:
             self._async.submit(state, self.plan, step, self.step_dir(step), **kw)
         else:
@@ -198,14 +288,75 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
+    def _inflight_roots(self) -> set[Path]:
+        """Step directories with a save queued or mid-write right now."""
+        out: set[Path] = set()
+        if self._async is not None:
+            out |= self._async.pending_roots()
+        if self._drainer is not None:
+            out |= self._drainer.pending_roots()
+        return out
+
     def gc(self) -> None:
         """Keep the newest ``keep_last`` committed checkpoints (+their UCP
-        caches); remove uncommitted wreckage older than the newest commit."""
+        caches); remove uncommitted wreckage older than the newest commit.
+
+        Delta-aware: a kept delta's whole ancestor chain stays alive — a
+        base is only collectable once no surviving manifest references it
+        (a ``full_interval`` rebase is what eventually frees old chains) —
+        and chains pinned by an in-flight delta's base resolution are held
+        until that save completes.  In-flight-aware: directories the async
+        saver / hot drainer are still writing are never wreckage, even
+        when a newer save already committed — an older queued save may
+        legitimately commit *after* a newer synchronous one.
+        """
         steps = self.steps()
-        for s in steps[: -self.keep_last] if self.keep_last else []:
-            shutil.rmtree(self.step_dir(s), ignore_errors=True)
-            shutil.rmtree(Path(str(self.step_dir(s)) + ".ucp"), ignore_errors=True)
-            self.engine.invalidate(self.step_dir(s))
+        inflight = self._inflight_roots()
+        keep: set[int] = set(steps[-self.keep_last:]) if self.keep_last else set(steps)
+        # Expand with every step a kept chain references.  Provenance is
+        # flattened in each manifest, but walk to a fixpoint anyway so a
+        # kept base that is itself a delta keeps *its* ancestors too.
+        frontier = list(keep)
+        while frontier:
+            s = frontier.pop()
+            refs = self._refs_cache.get(s)
+            if refs is None:
+                try:
+                    refs = DistCheckpoint.open(self.step_dir(s)).referenced_steps()
+                except (OSError, ValueError, KeyError):
+                    continue  # unreadable manifest: nothing to pin
+                if self.step_dir(s) not in inflight:
+                    # cache only settled steps: an in-flight re-save may be
+                    # about to replace this manifest
+                    self._refs_cache[s] = refs
+            for r in refs:
+                if r not in keep:
+                    keep.add(r)
+                    frontier.append(r)
+        with self._pin_lock:
+            # pins die with their save: drop entries whose save finished
+            self._pinned_chains = {
+                r: c for r, c in self._pinned_chains.items() if r in inflight
+            }
+        for s in steps:
+            step_dir = self.step_dir(s)
+            if s in keep or step_dir in inflight:
+                continue
+            # Per-deletion critical section, shared with the delta base
+            # loader: the pin set is re-read right before the rmtree, so a
+            # base resolved concurrently is either already pinned (skip) or
+            # resolves strictly after the deletion (loader rebases).
+            with self._pin_lock:
+                pinned: set[Path] = set().union(
+                    set(), *self._pinned_chains.values()
+                )
+                if step_dir in pinned:
+                    continue
+                self._refs_cache.pop(s, None)
+                shutil.rmtree(step_dir, ignore_errors=True)
+                shutil.rmtree(Path(str(step_dir) + ".ucp"), ignore_errors=True)
+            self.engine.invalidate(step_dir)
+            self.engine.invalidate(str(step_dir) + ".ucp")
         if steps:
             newest = self.step_dir(steps[-1])
             for p in self.root.glob("step_*"):
@@ -213,6 +364,7 @@ class CheckpointManager:
                     p.is_dir()
                     and not p.name.endswith(".ucp")
                     and not (p / "COMMIT").exists()
+                    and p not in inflight
                     and p.name < newest.name
                 ):
                     shutil.rmtree(p, ignore_errors=True)
@@ -293,8 +445,9 @@ class CheckpointManager:
                 if force_mode is not None:
                     raise
                 # Fall back cleanly: drop any cached handles/indexes of the
-                # (possibly damaged) source and take the convert+Load path.
-                self.engine.invalidate(ckpt.root)
+                # (possibly damaged) source — for a delta, of its whole
+                # ancestor chain — and take the convert+Load path.
+                self.engine.invalidate_chain(ckpt)
                 mode = ResumeMode.VIA_UCP
                 reason = (
                     f"{reason}; stream failed ({type(e).__name__}: {e}), "

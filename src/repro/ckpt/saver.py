@@ -22,12 +22,19 @@ import queue
 import threading
 import time
 from pathlib import Path
-from typing import Any, Mapping
+from typing import Any, Callable, Mapping
 
 import jax
 import numpy as np
 
-from repro.core.dist_ckpt import DistCheckpoint, DistManifest, shard_digest_key
+from repro.core.dist_ckpt import (
+    DistCheckpoint,
+    DistManifest,
+    check_chain_committed,
+    flatten_provenance,
+    resolve_delta_base,
+    shard_digest_key,
+)
 from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.layout import slice_shard
 from repro.core.patterns import StateKind
@@ -60,6 +67,12 @@ class SaveResult:
     path: Path
     bytes_written: int
     wall_time_s: float
+    # Delta provenance: "full" or "delta"; shard counts let callers verify
+    # the steady-state save really skipped the unchanged majority.
+    mode: str = "full"
+    shards_written: int = 0
+    shards_inherited: int = 0
+    fallback_reason: str = ""  # why a requested delta rebased to full
 
 
 def write_distributed(
@@ -71,6 +84,7 @@ def write_distributed(
     scalars: Mapping[str, Any] | None = None,
     config_fingerprint: Mapping[str, Any] | None = None,
     save_mode: str = "dedup",
+    base: "DistCheckpoint | Callable[[], DistCheckpoint | None] | None" = None,
     workers: int | None = None,
     engine: CheckpointEngine | None = None,
 ) -> SaveResult:
@@ -87,10 +101,32 @@ def write_distributed(
     ``workers=1`` is the exact serial reference path: shard-by-shard
     staging copies and writes, fsync per file, no engine machinery.
 
+    ``save_mode="delta"`` diffs every shard's content digest against
+    ``base`` (a committed :class:`DistCheckpoint`, or a callable resolving
+    one at execution time — the async saver resolves the newest committed
+    step on the writer thread so a queued delta never references a base
+    that failed to commit).  Only changed shards are written; unchanged
+    shards become manifest references into the owning ancestor directory
+    (provenance flattened — see ``DistManifest``).  Fidelity is full: the
+    committed manifest carries the complete digest table and every reader
+    resolves through the chain transparently.  An incompatible or missing
+    base degrades to a full save (a rebase), recorded in
+    ``SaveResult.fallback_reason`` — never an error on the save hot path.
+
     Precedence: explicit ``workers`` > ``engine.workers`` > the process
     default pool width.
     """
     t0 = time.perf_counter()
+    fallback_reason = ""
+    if save_mode == "delta":
+        base, fallback_reason = resolve_delta_base(
+            base, root, plan.mesh, plan.param_specs, save_mode
+        )
+        if base is None:
+            save_mode = "dedup"  # rebase: write a full snapshot
+    else:
+        base = None  # base is only meaningful for delta saves
+    base_digests = base.manifest.shard_digests if base is not None else None
     manifest = DistManifest(
         step=step,
         mesh=plan.mesh,
@@ -119,23 +155,45 @@ def write_distributed(
             for rank in ckpt.writing_ranks(name, kind):
                 jobs.append((rank, name, kind, arr, layout))
 
-    def write_one(job) -> tuple[int, str, str]:
+    def write_one(job) -> tuple[int, str, str, bool]:
         rank, name, kind, arr, layout = job
+        key = shard_digest_key(rank, name, kind)
         entries = layout.entries[rank]
-        written = digest = None
+        contiguous_view = None
         if (
-            not serial
-            and len(entries) == 1
+            len(entries) == 1
             and entries[0].shard_slice
             == tuple((0, s) for s in layout.local_shape)
         ):
             view = arr[entries[0].atom_index()]
             if view.flags.c_contiguous:
-                # Zero-copy fast path: the shard is one padding-free,
-                # contiguous rectangle of the snapshot — write the view
-                # directly, no staging copy at all.
-                written = ckpt.write_shard(rank, name, kind, view, fsync=False)
-                digest = content_digest(view)
+                contiguous_view = view
+        if base_digests is not None:
+            # Delta diff: digest first (zero-copy for contiguous shards),
+            # write only when the content changed since the base.  The
+            # steady-state cost of an unchanged shard is one staging slice
+            # + digest — no file write, no fsync.
+            if contiguous_view is not None:
+                shard, data = None, contiguous_view
+            else:
+                shard = slice_shard(arr, layout, rank, alloc=engine.alloc)
+                data = shard
+            digest = content_digest(data)
+            if base_digests.get(key) == digest:
+                engine.recycle(shard)
+                return 0, key, digest, True
+            written = ckpt.write_shard(rank, name, kind, data, fsync=serial)
+            engine.recycle(shard)
+            if not serial:
+                fsync_path(ckpt.own_shard_path(rank, name, kind))
+            return written, key, digest, False
+        written = digest = None
+        if not serial and contiguous_view is not None:
+            # Zero-copy fast path: the shard is one padding-free,
+            # contiguous rectangle of the snapshot — write the view
+            # directly, no staging copy at all.
+            written = ckpt.write_shard(rank, name, kind, contiguous_view, fsync=False)
+            digest = content_digest(contiguous_view)
         if written is None:
             # engine.alloc degrades to plain np.zeros under the serial
             # reference profile, so workers=1 stages exactly like the
@@ -147,15 +205,22 @@ def write_distributed(
         if not serial:
             # Pipelined durability: flush this file now, overlapping the
             # fsync round-trip with the other workers' writes.
-            fsync_path(ckpt.shard_path(rank, name, kind))
-        return written, shard_digest_key(rank, name, kind), digest
+            fsync_path(ckpt.own_shard_path(rank, name, kind))
+        return written, key, digest, False
 
     try:
         results = engine.map(write_one, jobs)
-        written = sum(w for w, _, _ in results)
+        written = sum(w for w, _, _, _ in results)
         # Content digests land in the manifest before COMMIT, so a committed
-        # checkpoint always carries verifiable integrity metadata.
-        manifest.shard_digests = {k: d for _, k, d in results}
+        # checkpoint always carries verifiable integrity metadata.  The
+        # table covers every shard — written AND inherited — so the next
+        # delta diffs against this manifest alone.
+        manifest.shard_digests = {k: d for _, k, d, _ in results}
+        n_inherited = sum(1 for _, _, _, inh in results if inh)
+        if base is not None:
+            flatten_provenance(
+                manifest, base, [k for _, k, _, inh in results if inh]
+            )
         ckpt.rewrite_manifest()
         # A re-save into an existing directory must not leave readers on
         # stale handles of the replaced files (os.replace keeps old inodes
@@ -168,8 +233,19 @@ def write_distributed(
     finally:
         if owns_engine:
             engine.close()
+    if base is not None:
+        check_chain_committed(ckpt)
     ckpt.commit()
-    return SaveResult(step, Path(root), written, time.perf_counter() - t0)
+    return SaveResult(
+        step,
+        Path(root),
+        written,
+        time.perf_counter() - t0,
+        mode="delta" if base is not None else "full",
+        shards_written=len(results) - n_inherited,
+        shards_inherited=n_inherited,
+        fallback_reason=fallback_reason,
+    )
 
 
 class AsyncSaver:
@@ -185,6 +261,12 @@ class AsyncSaver:
     unbounded queue grows until OOM.  ``submit`` blocks (backpressure) once
     ``max_pending`` snapshots are in flight — checkpointing degrades to
     synchronous instead of eating the host.
+
+    ``pending_roots()`` exposes the step directories of saves that are
+    queued or mid-write.  ``CheckpointManager.gc`` excludes them from
+    uncommitted-wreckage removal: an older queued save legitimately
+    commits *after* a newer synchronous one, and rmtree'ing its directory
+    mid-write would turn a valid save into a torn one.
     """
 
     def __init__(self, max_pending: int = 2):
@@ -194,8 +276,15 @@ class AsyncSaver:
         self._results: list[SaveResult] = []
         self._errors: list[BaseException] = []
         self._closed = False
+        self._pending_lock = threading.Lock()
+        self._pending_roots: set[Path] = set()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
+
+    def pending_roots(self) -> set[Path]:
+        """Directories of saves still queued or being written."""
+        with self._pending_lock:
+            return set(self._pending_roots)
 
     def _worker(self) -> None:
         while True:
@@ -222,9 +311,19 @@ class AsyncSaver:
             )
         self.check()
         snap = snapshot_state(state)  # blocking: consistent cut of the state
+        root_path = Path(root)
+        with self._pending_lock:
+            self._pending_roots.add(root_path)
 
         def job() -> SaveResult:
-            return write_distributed(snap, plan, step, root, **kw)
+            try:
+                return write_distributed(snap, plan, step, root, **kw)
+            finally:
+                # Only now may GC treat the directory as wreckage (on
+                # success it carries COMMIT; on failure it really is
+                # wreckage and the next GC collects it).
+                with self._pending_lock:
+                    self._pending_roots.discard(root_path)
 
         self._q.put(job)
 

@@ -41,7 +41,7 @@ UCP_FORMAT_VERSION = "repro-ucp/v1"
 class AtomInfo:
     """Index entry for one atom (one parameter).
 
-    ``digests`` maps state kind → content digest (``crc32:...``) of the
+    ``digests`` maps state kind → content digest (``sha256:...``; older manifests ``crc32:...``) of the
     atom tensor, recorded by ``convert_to_ucp`` and checked by
     :meth:`UcpCheckpoint.validate`.  Empty for pre-digest checkpoints.
     """
@@ -191,7 +191,7 @@ class UcpCheckpoint:
         """Integrity check: every indexed atom file exists with the right
         shape, and (when the manifest carries digests) its content bytes
         match the digest recorded at conversion time."""
-        from .tensor_io import content_digest
+        from .tensor_io import digest_matches
 
         problems: list[str] = []
         for name, info in self.manifest.atoms.items():
@@ -209,7 +209,7 @@ class UcpCheckpoint:
                     )
                     continue
                 want = info.digests.get(kind)
-                if want is not None and content_digest(arr) != want:
+                if want is not None and not digest_matches(arr, want):
                     problems.append(
                         f"{name}@{kind.value}: content digest mismatch "
                         f"(recorded {want})"

@@ -19,6 +19,15 @@ Pipeline-parallel stage partitioning needs no special casing: a PP Source is
 simply a mesh with a ``pipe`` axis and stacked parameters sharded along it,
 so per-stage ownership falls out of the ordinary fragment layout
 (see DESIGN.md §2).
+
+**Delta checkpoints** (``save_mode="delta"``, DESIGN.md §1): a delta step
+directory physically contains only the shards whose content digest changed
+since the base checkpoint; every unchanged shard is a *manifest reference*
+(``shard_sources``: digest key → owning step, flattened through the chain
+at save time so resolution is one hop, never a walk).  ``shard_path``
+resolves each shard to the sibling step directory that owns its bytes, so
+every reader — DIRECT restore, streaming reshard, UCP export, validation —
+serves delta chains through the unchanged fragment-read path.
 """
 
 from __future__ import annotations
@@ -39,6 +48,10 @@ from .tensor_io import content_digest, dtype_name, load_tensor, save_tensor
 __all__ = [
     "DistManifest",
     "DistCheckpoint",
+    "check_chain_committed",
+    "delta_incompatibility",
+    "flatten_provenance",
+    "resolve_delta_base",
     "shard_filename",
     "shard_digest_key",
     "writing_ranks_for",
@@ -66,7 +79,95 @@ def writing_ranks_for(spec: ParamSpec, layout: ShardLayout, save_mode: str) -> l
     """
     if save_mode == "all" or spec.average:
         return [r for r in layout.mesh.ranks() if layout.entries[r]]
+    # "delta" enumerates exactly like "dedup": the write *set* is identical,
+    # a delta save merely skips the members whose bytes didn't change.
     return [r for r in layout.primary_ranks() if layout.entries[r]]
+
+
+def delta_incompatibility(base: "DistManifest", mesh, params, save_mode: str) -> str | None:
+    """Why a delta against ``base`` is invalid (None == a delta is fine).
+
+    A delta inherits unchanged shards by reference, which is only sound
+    when the new snapshot's shard *geometry* is byte-for-byte the same as
+    the base's: same mesh, same parameter set, identical per-param specs,
+    and a matching write set (``"all"`` enumerates different owners than
+    ``"dedup"``/``"delta"``).  Callers fall back to a full save (rebase)
+    when this returns a reason.
+    """
+    if save_mode == "all" or base.save_mode == "all":
+        return "save_mode 'all' has a different write set; delta requires dedup"
+    if not base.shard_digests:
+        return "base checkpoint predates content digests; nothing to diff against"
+    if base.mesh != mesh:
+        return f"mesh changed {dict(base.mesh.axes)} -> {dict(mesh.axes)}"
+    if set(base.params) != set(params):
+        return "parameter set changed"
+    for name, spec in params.items():
+        if base.params[name].to_json() != spec.to_json():
+            return f"param spec changed for {name}"
+    return None
+
+
+def resolve_delta_base(
+    base, root, mesh, params, save_mode: str
+) -> "tuple[DistCheckpoint | None, str]":
+    """Resolve and vet a delta base: ``(base, "")`` when a delta against it
+    is valid, else ``(None, reason)`` — the caller rebases to a full save.
+
+    ``base`` may be a :class:`DistCheckpoint` or a zero-arg callable
+    returning one (resolved here, on the *writing* thread, so a queued
+    delta diffs against the newest step that actually committed).  Shared
+    by ``write_distributed`` and the hot drainer's ``persist_snapshot`` so
+    the disk and hot-promotion paths cannot drift.
+    """
+    if callable(base):
+        base = base()
+    if base is None:
+        return None, "no committed base checkpoint"
+    if not base.is_committed:
+        return None, f"base {base.root} is not committed"
+    if base.root.parent != Path(root).parent:
+        return None, (
+            f"base {base.root} is not a sibling of {root}; "
+            "chain resolution requires sibling step directories"
+        )
+    reason = delta_incompatibility(base.manifest, mesh, params, save_mode)
+    if reason:
+        return None, reason
+    return base, ""
+
+
+def flatten_provenance(
+    manifest: "DistManifest", base: "DistCheckpoint", inherited_keys
+) -> None:
+    """Record delta provenance on ``manifest``: every inherited shard maps
+    to the step that *actually wrote its bytes* (one hop through the base's
+    own — already flat — provenance), plus the sibling directory name of
+    every owning step."""
+    bm = base.manifest
+    sources = {k: bm.shard_sources.get(k, bm.step) for k in inherited_keys}
+    manifest.base_step = bm.step
+    manifest.shard_sources = sources
+    manifest.base_dirs = {
+        str(owner): (
+            base.root.name if owner == bm.step else bm.base_dirs[str(owner)]
+        )
+        for owner in set(sources.values())
+    }
+
+
+def check_chain_committed(ckpt: "DistCheckpoint") -> None:
+    """Pre-commit guard for a delta: every ancestor directory it references
+    must still be a committed checkpoint.  Committing a delta whose chain
+    was GC'd in the meantime would produce a committed-but-unservable step;
+    failing here leaves ordinary uncommitted wreckage instead (the chain
+    stays servable from the last commit)."""
+    for chain_root in ckpt.chain_roots()[1:]:
+        if not (chain_root / "COMMIT").exists():
+            raise RuntimeError(
+                f"delta for step {ckpt.manifest.step} references "
+                f"{chain_root}, which is no longer a committed checkpoint"
+            )
 
 
 @dataclasses.dataclass
@@ -79,10 +180,22 @@ class DistManifest:
     as tensors.
 
     ``shard_digests`` maps :func:`shard_digest_key` → content digest
-    (``crc32:...``) of every persisted shard, recorded at save time and
+    (``sha256:...``; older manifests ``crc32:...``) of every persisted shard, recorded at save time and
     checked by :meth:`DistCheckpoint.validate` / ``restore(verify=True)``.
     Empty for checkpoints written before digests existed (verification is
-    then a no-op, not a failure).
+    then a no-op, not a failure).  The table always covers the *full*
+    shard set — including shards a delta inherits — so the next delta
+    diffs against this manifest alone, never walking the chain.
+
+    Delta provenance (``save_mode="delta"``):
+
+    * ``base_step`` — the committed step this delta was diffed against;
+    * ``shard_sources`` — digest key → owning step for every shard whose
+      bytes live in an *ancestor* directory (own shards are omitted).
+      Flattened at save time: a shard untouched for five deltas maps to
+      the step that actually wrote it, not to the immediate base;
+    * ``base_dirs`` — owning step → sibling directory name, so readers
+      resolve ancestors without assuming a naming scheme.
     """
 
     step: int
@@ -90,13 +203,16 @@ class DistManifest:
     params: dict[str, ParamSpec]
     scalars: dict[str, Any]
     config_fingerprint: dict[str, Any]
-    save_mode: str = "dedup"  # "dedup" | "all"
+    save_mode: str = "dedup"  # "dedup" | "all" | "delta"
     format_version: str = FORMAT_VERSION
     created_at: float = 0.0
     shard_digests: dict[str, str] = dataclasses.field(default_factory=dict)
+    base_step: int | None = None
+    shard_sources: dict[str, int] = dataclasses.field(default_factory=dict)
+    base_dirs: dict[str, str] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "format_version": self.format_version,
             "step": self.step,
             "mesh": self.mesh.to_json(),
@@ -107,6 +223,11 @@ class DistManifest:
             "created_at": self.created_at,
             "shard_digests": self.shard_digests,
         }
+        if self.base_step is not None:
+            out["base_step"] = self.base_step
+            out["shard_sources"] = self.shard_sources
+            out["base_dirs"] = self.base_dirs
+        return out
 
     @classmethod
     def from_json(cls, d: Mapping) -> "DistManifest":
@@ -121,6 +242,9 @@ class DistManifest:
             save_mode=str(d.get("save_mode", "dedup")),
             created_at=float(d.get("created_at", 0.0)),
             shard_digests={str(k): str(v) for k, v in d.get("shard_digests", {}).items()},
+            base_step=int(d["base_step"]) if d.get("base_step") is not None else None,
+            shard_sources={str(k): int(v) for k, v in d.get("shard_sources", {}).items()},
+            base_dirs={str(k): str(v) for k, v in d.get("base_dirs", {}).items()},
         )
 
 
@@ -135,8 +259,38 @@ class DistCheckpoint:
     def rank_dir(self, rank: int) -> Path:
         return self.root / "ranks" / f"rank_{rank:05d}"
 
-    def shard_path(self, rank: int, name: str, kind: StateKind) -> Path:
+    def own_shard_path(self, rank: int, name: str, kind: StateKind) -> Path:
+        """Where this checkpoint *writes* the shard — always its own tree,
+        never an ancestor's (the write side must not follow provenance)."""
         return self.rank_dir(rank) / shard_filename(name, kind)
+
+    def owner_step(self, rank: int, name: str, kind: StateKind) -> int:
+        """The step whose directory physically holds this shard's bytes."""
+        return self.manifest.shard_sources.get(
+            shard_digest_key(rank, name, kind), self.manifest.step
+        )
+
+    def shard_path(self, rank: int, name: str, kind: StateKind) -> Path:
+        """Chain-resolved read path of one shard (one hop: provenance is
+        flattened at save time, so this never walks more than one link)."""
+        owner = self.manifest.shard_sources.get(shard_digest_key(rank, name, kind))
+        if owner is None:
+            return self.own_shard_path(rank, name, kind)
+        base = self.root.parent / self.manifest.base_dirs[str(owner)]
+        return base / "ranks" / f"rank_{rank:05d}" / shard_filename(name, kind)
+
+    def referenced_steps(self) -> set[int]:
+        """Ancestor steps whose directories this checkpoint's shards live in
+        (empty for a full checkpoint).  GC must keep these alive."""
+        return set(self.manifest.shard_sources.values())
+
+    def chain_roots(self) -> list[Path]:
+        """This root plus every ancestor directory it references — the full
+        set of directories a reader of this checkpoint may open files in
+        (engine invalidation walks exactly this list)."""
+        return [self.root] + [
+            self.root.parent / d for d in self.manifest.base_dirs.values()
+        ]
 
     @property
     def commit_path(self) -> Path:
@@ -148,8 +302,14 @@ class DistCheckpoint:
 
     @property
     def cache_key(self) -> str:
-        """Engine index-cache identity (see ``repro.core.engine.FragmentSource``)."""
-        return str(self.root)
+        """Engine index-cache identity (see ``repro.core.engine.FragmentSource``).
+
+        A delta's key includes the owning base step: re-saving the same
+        step directory against a different base must never serve stale
+        index entries (prefix invalidation by root still matches both)."""
+        if self.manifest.base_step is None:
+            return str(self.root)
+        return f"{self.root}@delta:{self.manifest.base_step}"
 
     # ------------------------------------------------------------------ write
     @classmethod
@@ -179,7 +339,7 @@ class DistCheckpoint:
         instead of paying a synchronous flush per file.
         """
         self.rank_dir(rank).mkdir(parents=True, exist_ok=True)
-        save_tensor(self.shard_path(rank, name, kind), shard, fsync=fsync)
+        save_tensor(self.own_shard_path(rank, name, kind), shard, fsync=fsync)
         return shard.nbytes
 
     def writing_ranks(self, name: str, kind: StateKind) -> list[int]:
@@ -273,9 +433,19 @@ class DistCheckpoint:
                     if want is None:
                         continue  # pre-digest checkpoint: existence only
                     try:
-                        got = content_digest(self.read_shard(rank, name, kind))
+                        arr = self.read_shard(rank, name, kind)
                     except Exception as e:  # unreadable == corrupt
                         problems.append(f"unreadable shard {path}: {e}")
+                        continue
+                    try:
+                        # recompute with the recorded digest's own algorithm
+                        # (older manifests carry crc32, new ones sha256)
+                        got = content_digest(arr, want.split(":", 1)[0])
+                    except ValueError:
+                        problems.append(
+                            f"{shard_digest_key(rank, name, kind)}: "
+                            f"unrecognized recorded digest {want!r}"
+                        )
                         continue
                     if got != want:
                         problems.append(

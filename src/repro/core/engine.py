@@ -112,6 +112,17 @@ def source_cache_key(source) -> str:
     return key if key is not None else str(source.root)
 
 
+def _key_under_root(key: str, root: str) -> bool:
+    """Whether a cache key belongs to ``root``: the root itself, a delta
+    variant (``root@delta:N``), a derived key (``root::atom::...``), or a
+    file under it (``root/...``) — but never a *sibling* that merely shares
+    ``root`` as a string prefix (``root10`` vs ``root1``)."""
+    if not key.startswith(root):
+        return False
+    rest = key[len(root):]
+    return rest == "" or rest[0] in (os.sep, "@", ":")
+
+
 # ---------------------------------------------------------------------------
 # Buffer arena
 # ---------------------------------------------------------------------------
@@ -318,10 +329,12 @@ class HandleCache:
                     self._bytes -= self._weight(old)
 
     def invalidate_prefix(self, prefix: str | os.PathLike) -> None:
-        """Drop every handle under a directory (checkpoint rewritten/GC'd)."""
+        """Drop every handle under a directory (checkpoint rewritten/GC'd).
+        Boundary-aware: never touches a sibling directory that merely
+        shares the prefix as a string (``run10`` vs ``run1``)."""
         prefix = str(prefix)
         with self._lock:
-            for key in [k for k in self._entries if k.startswith(prefix)]:
+            for key in [k for k in self._entries if _key_under_root(k, prefix)]:
                 self._bytes -= self._weight(self._entries.pop(key))
 
     def __len__(self) -> int:
@@ -605,11 +618,23 @@ class CheckpointEngine:
         self.handles.invalidate_prefix(root)
         self.atoms.invalidate_prefix(root)
         with self._atom_locks_lock:
-            for key in [k for k in self._atom_locks if k.startswith(root)]:
+            for key in [k for k in self._atom_locks if _key_under_root(k, root)]:
                 del self._atom_locks[key]
         with self._index_lock:
-            for key in [k for k in self._indexes if k[0] == root]:
+            # Boundary-aware prefix match: a delta checkpoint's cache_key is
+            # "<root>@delta:<base_step>" (see DistCheckpoint.cache_key) and
+            # must be dropped with its root — but a sibling root that shares
+            # the string prefix must not be.
+            for key in [k for k in self._indexes if _key_under_root(k[0], root)]:
                 del self._indexes[key]
+
+    def invalidate_chain(self, ckpt) -> None:
+        """Invalidate a checkpoint root *and* every ancestor directory its
+        delta chain references — a reader that failed mid-chain may hold
+        stale handles/indexes of any link, not just the tip."""
+        roots = getattr(ckpt, "chain_roots", None)
+        for root in roots() if roots is not None else [ckpt.root]:
+            self.invalidate(root)
 
 
 _default_engine: CheckpointEngine | None = None

@@ -14,6 +14,7 @@ read.
 
 from __future__ import annotations
 
+import hashlib
 import os
 import zlib
 from pathlib import Path
@@ -34,6 +35,7 @@ except ImportError:  # pragma: no cover
 __all__ = [
     "IntegrityError",
     "content_digest",
+    "digest_matches",
     "resolve_dtype",
     "dtype_name",
     "save_tensor",
@@ -47,15 +49,18 @@ class IntegrityError(ValueError):
     """A checkpoint's bytes do not match its recorded content digests."""
 
 
-def content_digest(arr: np.ndarray) -> str:
+def content_digest(arr: np.ndarray, algo: str = "sha256") -> str:
     """Digest of an array's *content* bytes (layout/file-header agnostic).
 
-    crc32 over the C-order element bytes: fast enough to run on every shard
-    of every save (~GB/s, small next to the fsync the shard already pays)
-    and strong enough to catch the silent-corruption cases that motivate
-    it (torn writes, bit rot, truncation, a replica diverging from its
-    primary).  Not cryptographic — this is an integrity check, not
-    authentication.
+    Digests are self-describing (``<algo>:<hex>``) and computed over the
+    C-order element bytes.  The default is sha256 truncated to 128 bits:
+    hardware-accelerated sha is as fast as zlib's crc32 on modern hosts,
+    and — unlike crc32 — collision-resistant enough that a digest match
+    may be treated as byte equality, which is what the delta save's
+    changed-shard diff does (``save_mode="delta"``).  ``"crc32"`` is kept
+    for verifying manifests recorded before the upgrade (a delta diff
+    against a crc32-era digest simply never matches, so the shard is
+    rewritten and the chain upgrades itself — mismatch is always safe).
     """
     a = np.ascontiguousarray(arr)
     try:
@@ -64,7 +69,23 @@ def content_digest(arr: np.ndarray) -> str:
         # extended dtypes (bfloat16 et al.) may not export a buffer format;
         # reinterpret as raw bytes instead (same content, same digest).
         buf = a.tobytes()
-    return f"crc32:{zlib.crc32(buf) & 0xFFFFFFFF:08x}"
+    if algo == "sha256":
+        return f"sha256:{hashlib.sha256(buf).hexdigest()[:32]}"
+    if algo == "crc32":
+        return f"crc32:{zlib.crc32(buf) & 0xFFFFFFFF:08x}"
+    raise ValueError(f"unknown digest algorithm {algo!r}")
+
+
+def digest_matches(arr: np.ndarray, recorded: str) -> bool:
+    """Whether an array's content matches a recorded digest, using the
+    algorithm the digest itself names (old manifests carry crc32).  A
+    malformed/unrecognized recorded digest cannot match anything — it is
+    reported as a mismatch, never raised (validation must turn corruption
+    into findings, not crashes)."""
+    try:
+        return content_digest(arr, recorded.split(":", 1)[0]) == recorded
+    except ValueError:
+        return False
 
 
 def resolve_dtype(name: str) -> np.dtype:

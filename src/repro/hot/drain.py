@@ -23,8 +23,16 @@ import queue
 import threading
 import time
 from pathlib import Path
+from typing import Callable
 
-from repro.core.dist_ckpt import DistCheckpoint, DistManifest, shard_digest_key
+from repro.core.dist_ckpt import (
+    DistCheckpoint,
+    DistManifest,
+    check_chain_committed,
+    flatten_provenance,
+    resolve_delta_base,
+    shard_digest_key,
+)
 from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.patterns import StateKind
 from repro.core.tensor_io import fsync_path
@@ -41,6 +49,8 @@ def persist_snapshot(
     *,
     engine: CheckpointEngine | None = None,
     fragments: list | None = None,
+    base: "DistCheckpoint | Callable[[], DistCheckpoint | None] | None" = None,
+    save_mode: str | None = None,
 ) -> SaveResult:
     """Write one hot snapshot to disk as a committed distributed checkpoint.
 
@@ -55,6 +65,12 @@ def persist_snapshot(
     (``release()``) between enqueue and execution cannot empty the job —
     the list's array references keep the bytes alive (arena reclamation is
     refcount-gated) even after the snapshot itself is released.
+
+    ``save_mode="delta"`` promotes the snapshot as a delta against ``base``
+    (a committed checkpoint, or a callable resolved on the drain thread),
+    exactly like ``write_distributed``: only fragments whose capture-time
+    digest changed are written, the rest become manifest references.  An
+    incompatible/missing base degrades to a full promotion (rebase).
     """
     t0 = time.perf_counter()
     if fragments is None:
@@ -78,37 +94,69 @@ def persist_snapshot(
     engine = engine or default_engine()
     serial = engine.workers == 1
     m = snapshot.manifest
+    fallback_reason = ""
+    if save_mode == "delta":
+        base, fallback_reason = resolve_delta_base(
+            base, root, m.mesh, m.params, m.save_mode
+        )
+    else:
+        base = None
+    digests = {
+        shard_digest_key(f.owner, name, StateKind(kv)): f.digest
+        for name, kv, f in fragments
+    }
     manifest = DistManifest(
         step=m.step,
         mesh=m.mesh,
         params=dict(m.params),
         scalars=dict(m.scalars),
         config_fingerprint=dict(m.config_fingerprint),
-        save_mode=m.save_mode,
+        save_mode="delta" if base is not None else m.save_mode,
         # digests come from the captured fragment list, not the (possibly
-        # since-released) snapshot dicts.
-        shard_digests={
-            shard_digest_key(f.owner, name, StateKind(kv)): f.digest
-            for name, kv, f in fragments
-        },
+        # since-released) snapshot dicts.  The table covers the FULL set,
+        # inherited fragments included, so the next delta diffs against
+        # this manifest alone.
+        shard_digests=digests,
     )
+    if base is not None:
+        # Capture digests are the diff: a fragment whose digest matches the
+        # base's recorded digest is promoted as a manifest reference with
+        # flattened provenance, exactly like write_distributed.
+        flatten_provenance(
+            manifest, base,
+            [k for k, d in digests.items()
+             if base.manifest.shard_digests.get(k) == d],
+        )
     ckpt = DistCheckpoint.create(root, manifest)
     jobs = [
         (name, StateKind(kv), frag.owner, frag.data)
         for name, kv, frag in fragments
+        if shard_digest_key(frag.owner, name, StateKind(kv))
+        not in manifest.shard_sources
     ]
 
     def write_one(job) -> int:
         name, kind, rank, data = job
         written = ckpt.write_shard(rank, name, kind, data, fsync=serial)
         if not serial:
-            fsync_path(ckpt.shard_path(rank, name, kind))
+            fsync_path(ckpt.own_shard_path(rank, name, kind))
         return written
 
     written = sum(engine.map(write_one, jobs))
     engine.invalidate(ckpt.root)  # a re-drain into the same dir replaced files
+    if base is not None:
+        check_chain_committed(ckpt)
     ckpt.commit()
-    return SaveResult(snapshot.step, Path(str(root)), written, time.perf_counter() - t0)
+    return SaveResult(
+        snapshot.step,
+        Path(str(root)),
+        written,
+        time.perf_counter() - t0,
+        mode="delta" if base is not None else "full",
+        shards_written=len(jobs),
+        shards_inherited=len(fragments) - len(jobs),
+        fallback_reason=fallback_reason,
+    )
 
 
 class HotDrainer:
@@ -139,8 +187,22 @@ class HotDrainer:
         self._results: list[SaveResult] = []
         self._errors: list[BaseException] = []
         self._closed = False
+        self._pending_lock = threading.Lock()
+        self._pending_roots: set[Path] = set()
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
+
+    @property
+    def next_drains(self) -> bool:
+        """Whether the next ``maybe_drain`` call will enqueue a promotion
+        (lets the policy layer decide full-vs-delta before calling)."""
+        return (self._seq + 1) % self.every == 0
+
+    def pending_roots(self) -> set[Path]:
+        """Directories of promotions still queued or being written —
+        excluded from GC's wreckage removal, like AsyncSaver's."""
+        with self._pending_lock:
+            return set(self._pending_roots)
 
     def _worker(self) -> None:
         while True:
@@ -155,8 +217,16 @@ class HotDrainer:
             finally:
                 self._q.task_done()
 
-    def maybe_drain(self, snapshot: HotSnapshot, root) -> bool:
-        """Enqueue promotion if this snapshot is an Nth one; True if queued."""
+    def maybe_drain(self, snapshot: HotSnapshot, root, *, base=None,
+                    save_mode: str | None = None) -> bool:
+        """Enqueue promotion if this snapshot is an Nth one; True if queued.
+
+        ``base``/``save_mode`` pass through to :func:`persist_snapshot` —
+        the manager requests ``save_mode="delta"`` with a base *loader*
+        that the drain thread resolves at execution time, so a queued
+        delta promotion always diffs against a step that actually
+        committed.
+        """
         if self._closed:
             raise RuntimeError("HotDrainer.maybe_drain() after close()")
         self.check()
@@ -175,11 +245,21 @@ class HotDrainer:
         # execution releases the snapshot, and persisting the then-empty
         # snapshot would commit a checkpoint with zero shards.
         fragments = snapshot.fragments()
-        self._q.put(
-            lambda: persist_snapshot(
-                snapshot, root, engine=engine, fragments=fragments
-            )
-        )
+        root_path = Path(str(root))
+        with self._pending_lock:
+            self._pending_roots.add(root_path)
+
+        def job() -> SaveResult:
+            try:
+                return persist_snapshot(
+                    snapshot, root, engine=engine, fragments=fragments,
+                    base=base, save_mode=save_mode,
+                )
+            finally:
+                with self._pending_lock:
+                    self._pending_roots.discard(root_path)
+
+        self._q.put(job)
         return True
 
     def check(self) -> None:

@@ -47,7 +47,7 @@ from repro.core.dist_ckpt import (
 from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.layout import slice_shard
 from repro.core.patterns import StateKind
-from repro.core.tensor_io import content_digest, resolve_dtype
+from repro.core.tensor_io import content_digest, digest_matches, resolve_dtype
 
 from .replicate import ReplicaStats, ReplicationPolicy, place_holders
 
@@ -186,11 +186,10 @@ class HotSnapshot:
         """Re-digest every surviving fragment against its capture digest."""
         problems: list[str] = []
         for name, kv, frag in self.fragments():
-            got = content_digest(frag.data)
-            if got != frag.digest:
+            if not digest_matches(frag.data, frag.digest):
                 problems.append(
-                    f"{name}@{kv} owner {frag.owner}: digest {got} != "
-                    f"captured {frag.digest}"
+                    f"{name}@{kv} owner {frag.owner}: content does not "
+                    f"match captured digest {frag.digest}"
                 )
         return problems
 

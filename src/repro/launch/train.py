@@ -45,6 +45,13 @@ def build_parser() -> argparse.ArgumentParser:
                    "N steps (repro.hot); every save-interval/hot-interval-th "
                    "snapshot is drained to disk in the background")
     p.add_argument("--hot-replication", type=int, default=1)
+    p.add_argument("--save-mode", default="dedup",
+                   choices=("dedup", "all", "delta"),
+                   help="'delta': steady-state disk saves write only the "
+                   "shards whose content changed since the previous commit")
+    p.add_argument("--full-interval", type=int, default=8,
+                   help="with --save-mode delta: every Nth disk save is a "
+                   "full rebase, bounding the delta chain length")
     p.add_argument("--keep-last", type=int, default=10)
     p.add_argument("--sync-save", action="store_true")
     p.add_argument("--zero", type=int, default=3, choices=(1, 2, 3))
@@ -114,6 +121,8 @@ def main(argv=None) -> int:
         hot_interval=args.hot_interval,
         hot_replication=args.hot_replication,
         async_save=not args.sync_save,
+        save_mode=args.save_mode,
+        full_interval=args.full_interval,
     )
     state, info = trainer.init_or_restore()
     start = int(jax.device_get(state.step)) if (jax := __import__("jax")) else 0

@@ -48,6 +48,8 @@ def sample_tokens(spec: DataSpec, g: int) -> np.ndarray:
 
 def global_batch(spec: DataSpec, step: int, batch: int) -> np.ndarray:
     """The full global batch for one step: [batch, seq_len+1]."""
+    if batch == 0:  # np.stack rejects an empty list; the shape is still known
+        return np.empty((0, spec.seq_len + 1), np.int32)
     base = step * batch
     return np.stack([sample_tokens(spec, base + i) for i in range(batch)])
 
@@ -61,19 +63,32 @@ def batch_for_step(
     batch_override: int | None = None,
     seq_override: int | None = None,
 ) -> dict:
-    """Materialized training batch (tokens + stubbed frontend embeddings)."""
-    b = batch_override or shape.global_batch
-    s = seq_override or shape.seq_len
+    """Materialized training batch (tokens + stubbed frontend embeddings).
+
+    Each frontend branch draws from its own seed domain (the second
+    SeedSequence word) and lands under its own key — a model with both a
+    cross-attention frontend and an encoder gets two *independent* streams
+    instead of two correlated draws silently overwriting one key.
+    ``source_embeds`` is the model-facing stream ``LM.forward`` consumes:
+    the encoder frames when an encoder exists (matching forward's
+    precedence), else the cross-attention embeddings.
+    """
+    b = shape.global_batch if batch_override is None else batch_override
+    s = shape.seq_len if seq_override is None else seq_override
     spec = DataSpec(cfg.vocab_size, s, seed)
     out: dict = {"tokens": global_batch(spec, step, b)}
     if cfg.cross_attn is not None:
         rng = np.random.default_rng(np.random.SeedSequence([seed, 7, step]))
-        out["source_embeds"] = rng.standard_normal(
+        out["cross_attn_embeds"] = rng.standard_normal(
             (b, cfg.cross_attn.source_len, cfg.cross_attn.source_dim), np.float32
         )
     if cfg.encoder is not None:
-        rng = np.random.default_rng(np.random.SeedSequence([seed, 7, step]))
-        out["source_embeds"] = rng.standard_normal(
+        rng = np.random.default_rng(np.random.SeedSequence([seed, 11, step]))
+        out["encoder_embeds"] = rng.standard_normal(
             (b, cfg.encoder.source_len, cfg.d_model), np.float32
         )
+    if cfg.encoder is not None:
+        out["source_embeds"] = out["encoder_embeds"]
+    elif cfg.cross_attn is not None:
+        out["source_embeds"] = out["cross_attn_embeds"]
     return out

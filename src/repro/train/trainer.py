@@ -66,6 +66,8 @@ class Trainer:
         hot_interval: int | None = None,
         hot_replication: int = 1,
         async_save: bool = True,
+        save_mode: str = "dedup",
+        full_interval: int = 8,
         grad_transform=None,
     ) -> "Trainer":
         mesh_spec = MeshSpec.from_mesh(jmesh)
@@ -85,6 +87,8 @@ class Trainer:
                 hot_interval=hot_interval,
                 hot_replication=hot_replication,
                 async_save=async_save,
+                save_mode=save_mode,
+                full_interval=full_interval,
                 config_fingerprint={
                     "model": cfg.fingerprint(),
                     "parallel": parallel.fingerprint(),
@@ -171,10 +175,13 @@ class Trainer:
         from repro.configs.base import ShapeSpec
 
         shape = ShapeSpec("train", self.seq_len, self.batch_size, "train")
-        return batch_for_step(
+        full = batch_for_step(
             self.cfg, shape, step, seed=self.data_seed,
             batch_override=self.batch_size, seq_override=self.seq_len,
         )
+        # The jitted step's in_shardings pytree is (tokens[, source_embeds]);
+        # drop the per-branch keys batch_for_step also exposes.
+        return {k: v for k, v in full.items() if k in ("tokens", "source_embeds")}
 
     def run(
         self,

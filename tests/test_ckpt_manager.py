@@ -158,6 +158,45 @@ def test_export_ucp_is_explicit_and_cached(setup):
         mgr.restore(jmesh, target_plan=plan2, force_mode=ResumeMode.DIRECT)
 
 
+def test_gc_spares_inflight_save_dirs(setup, monkeypatch):
+    """Regression: an older queued async save that commits after a newer
+    synchronous one must not have its directory rmtree'd mid-write by
+    ``gc()``'s uncommitted-wreckage removal."""
+    import threading
+
+    import repro.ckpt.saver as saver_mod
+
+    tmp, cfg, lm, plan, state, jmesh = setup
+    real_write = saver_mod.write_distributed
+    started, gate = threading.Event(), threading.Event()
+
+    def stalled_write(snap, plan_, step, root, **kw):
+        if step == 10:  # the older save: stall mid-write, dir already created
+            Path(root).mkdir(parents=True, exist_ok=True)
+            (Path(root) / "MANIFEST.json").write_text("{}")
+            started.set()
+            assert gate.wait(20), "test gate never opened"
+        return real_write(snap, plan_, step, root, **kw)
+
+    monkeypatch.setattr(saver_mod, "write_distributed", stalled_write)
+    mgr = CheckpointManager(tmp / "ck", plan, async_save=True)
+    mgr.save(state, 10)  # queued; stalls with its directory half-written
+    assert started.wait(20)
+    # a newer blocking save commits first, then gc() runs: step_10 is
+    # uncommitted and older than the newest commit — the exact wreckage
+    # signature — but it is in flight and must survive
+    mgr.save(state, 20, block=True)
+    assert mgr.steps() == [20]
+    assert mgr.step_dir(10).exists(), "gc rmtree'd an in-flight save dir"
+    gate.set()
+    results = mgr.wait()
+    assert any(r.step == 10 for r in results)
+    assert sorted(mgr.steps()) == [10, 20]  # the stalled save still committed
+    restored, info = mgr.restore(jmesh, step=10)
+    _state_equal(state, restored)
+    mgr.close()
+
+
 def test_async_saver_surfaces_errors():
     saver = AsyncSaver()
     saver._q.put(lambda: (_ for _ in ()).throw(RuntimeError("disk full")))

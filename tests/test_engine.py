@@ -346,3 +346,28 @@ def test_async_saver_bounds_pending_snapshots(monkeypatch):
     s.close()
     with pytest.raises(ValueError):
         AsyncSaver(max_pending=0)
+
+
+def test_invalidate_respects_path_boundaries():
+    """invalidate(root) must drop root's own keys (incl. the delta-variant
+    cache key and derived atom keys) but never a sibling's that merely
+    shares the root as a string prefix (run1 vs run10)."""
+    from repro.core.engine import _key_under_root
+
+    root = "/ck/run1"
+    assert _key_under_root("/ck/run1", root)
+    assert _key_under_root("/ck/run1/ranks/r0/a.npy", root)
+    assert _key_under_root("/ck/run1@delta:10", root)
+    assert _key_under_root("/ck/run1::atom::w@fp32", root)
+    assert not _key_under_root("/ck/run10", root)
+    assert not _key_under_root("/ck/run10/ranks/r0/a.npy", root)
+    assert not _key_under_root("/ck/run1.ucp/atoms/w/fp32.npy", root)
+
+    eng = CheckpointEngine(workers=2)
+    arr = np.zeros(4, np.float32)
+    eng.handles.get("/ck/run1/ranks/r0/a.npy", lambda: arr)
+    eng.handles.get("/ck/run10/ranks/r0/a.npy", lambda: arr)
+    eng.invalidate("/ck/run1")
+    assert "/ck/run1/ranks/r0/a.npy" not in eng.handles
+    assert "/ck/run10/ranks/r0/a.npy" in eng.handles
+    eng.close()

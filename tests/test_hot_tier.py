@@ -420,7 +420,7 @@ def test_content_digest_dtype_and_layout_stability():
     import ml_dtypes
 
     b = a.astype(ml_dtypes.bfloat16)  # extended dtype path
-    assert content_digest(b).startswith("crc32:")
+    assert content_digest(b).startswith("sha256:")
 
 
 # ---------------------------------------------------------------------------

@@ -108,6 +108,47 @@ def test_batch_for_step_includes_frontend_stub():
                                         cfg.cross_attn.source_dim)
 
 
+def test_batch_for_step_zero_override_is_not_unset():
+    """An explicit batch/seq override of 0 must be honored, not treated as
+    'use the shape default' (`or` vs `is None`)."""
+    cfg = reduced(get_config("smollm-360m"))
+    from repro.configs.base import ShapeSpec
+
+    b = batch_for_step(cfg, ShapeSpec("t", 8, 4, "train"), 0, batch_override=0)
+    assert b["tokens"].shape[0] == 0
+    b2 = batch_for_step(cfg, ShapeSpec("t", 8, 4, "train"), 0, seq_override=0)
+    assert b2["tokens"].shape == (4, 1)  # seq 0 → inputs+shifted labels
+
+
+def test_batch_for_step_frontend_branches_independent():
+    """cross_attn and encoder draw from distinct seed domains under
+    distinct keys — a model with both gets two independent streams, and
+    the model-facing ``source_embeds`` follows LM.forward's precedence
+    (encoder wins)."""
+    import dataclasses as dc
+
+    from repro.configs.base import ShapeSpec
+
+    vision = reduced(get_config("llama-3.2-vision-11b"))
+    whisper = reduced(get_config("whisper-tiny"))
+    both = dc.replace(whisper, cross_attn=vision.cross_attn)
+    b = batch_for_step(both, ShapeSpec("t", 8, 2, "train"), 0)
+    assert b["cross_attn_embeds"].shape == (
+        2, both.cross_attn.source_len, both.cross_attn.source_dim
+    )
+    assert b["encoder_embeds"].shape == (2, both.encoder.source_len, both.d_model)
+    # independent streams: the two draws must not be correlated copies
+    n = min(b["cross_attn_embeds"].size, b["encoder_embeds"].size)
+    assert not np.array_equal(
+        b["cross_attn_embeds"].ravel()[:n], b["encoder_embeds"].ravel()[:n]
+    )
+    # the model-facing stream is the encoder's (forward's precedence)
+    np.testing.assert_array_equal(b["source_embeds"], b["encoder_embeds"])
+    # single-frontend models keep the historical source_embeds contract
+    bv = batch_for_step(vision, ShapeSpec("t", 8, 2, "train"), 0)
+    np.testing.assert_array_equal(bv["source_embeds"], bv["cross_attn_embeds"])
+
+
 # ---------------------------------------------------------------------------
 # sharding plan: patterns + partition specs derive from one table
 # ---------------------------------------------------------------------------
