@@ -33,16 +33,19 @@ def main() -> None:
     args = p.parse_args()
 
     from . import bench_checkpointing as B
+    from . import bench_fanout as F
 
     benches = {
         "save_cost": B.bench_save_cost,               # paper Fig. 11
         "transform_load": B.bench_transform_load,     # paper Fig. 12
         "hot_tier": B.bench_hot_tier,                 # beyond-paper hot tier
         "delta": B.bench_delta,                       # beyond-paper delta saves
+        "fanout": F.bench_fanout,                     # beyond-paper serving fan-out
         "conversion_scaling": B.bench_conversion_scaling,  # §3.2 Table 2
         "correctness": B.bench_correctness,           # Fig. 6/7, Table 3
     }
-    sized = {"save_cost", "transform_load", "hot_tier", "delta"}  # accept sizes=...
+    # accept sizes=...
+    sized = {"save_cost", "transform_load", "hot_tier", "delta", "fanout"}
     sizes = tuple(s for s in args.sizes.split(",") if s)
     only = {s for s in args.only.split(",") if s}
     print("name,us_per_call,derived")

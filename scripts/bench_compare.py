@@ -30,7 +30,10 @@ process:
   path it replaced;
 * the delta save must stay faster than the full save of the same state
   (it writes a fraction of the bytes; if it isn't faster, the diff is
-  writing shards it should have inherited).
+  writing shards it should have inherited);
+* a 32-reader fan-out fleet must finish before 32 independent disk
+  readers (if it doesn't, the peer store / serving hot set stopped
+  deduplicating work).
 """
 
 from __future__ import annotations
@@ -63,6 +66,7 @@ ORDERING_PAIRS = [
         ("reshard_stream", "via_ucp_total"),
         ("reshard_stream_mixed", "via_ucp_total"),
         ("delta_save", "delta_full_save"),
+        ("fanout_readers_32", "fanout_independent_32"),
     )
 ]
 

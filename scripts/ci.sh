@@ -54,6 +54,12 @@ mods = ["repro"]
 for m in pkgutil.walk_packages(repro.__path__, prefix="repro."):
     mods.append(m.name)
 
+# Subsystem packages the walk must have discovered — a packaging mistake
+# (missing __init__.py, renamed dir) would otherwise shrink the walk
+# silently and the smoke would "pass" while covering less.
+for required in ("repro.core", "repro.ckpt", "repro.hot", "repro.serve"):
+    assert required in mods, f"import-smoke: {required} not discovered"
+
 failed = []
 for name in sorted(mods):
     try:
@@ -71,7 +77,7 @@ python -m pytest -x -q "${PYTEST_ARGS[@]}" "$@"
 
 stage="bench-smoke"
 smoke_json="$(mktemp /tmp/bench_smoke.XXXXXX.json)"
-python -m benchmarks.run --only save_cost,hot_tier,delta --sizes small \
+python -m benchmarks.run --only save_cost,hot_tier,delta,fanout --sizes small \
     --json "$smoke_json" >/dev/null
 python - "$smoke_json" <<'PY'
 import json
@@ -86,6 +92,7 @@ assert any(n.startswith("save_parallel_") for n in names), names
 assert any(n.startswith("hot_capture_") for n in names), names
 assert any(n.startswith("delta_save_") for n in names), names
 assert any(n.startswith("chain_restore_") for n in names), names
+assert any(n.startswith("fanout_readers_") for n in names), names
 print(f"bench-smoke: {len(rows)} rows ok")
 PY
 

@@ -1,6 +1,8 @@
 from .engine import CheckpointEngine, FragmentIndex, HandleCache, default_engine
 from .manager import CheckpointManager, RestoreInfo
 from .restore import (
+    build_param_arrays,
+    params_from_source,
     read_region_from_dist,
     read_region_from_source,
     state_from_dist,
@@ -11,7 +13,8 @@ from .restore import (
 from .saver import AsyncSaver, SaveResult, snapshot_state, write_distributed
 __all__ = [
     "CheckpointEngine", "FragmentIndex", "HandleCache", "default_engine",
-    "CheckpointManager", "RestoreInfo", "read_region_from_dist",
+    "CheckpointManager", "RestoreInfo", "build_param_arrays",
+    "params_from_source", "read_region_from_dist",
     "read_region_from_source", "state_from_dist", "state_from_source",
     "state_from_stream", "state_from_ucp", "AsyncSaver", "SaveResult",
     "snapshot_state", "write_distributed",

@@ -85,6 +85,7 @@ class CheckpointManager:
         save_mode: str = "dedup",
         full_interval: int = 8,
         config_fingerprint: Mapping[str, Any] | None = None,
+        registry=None,
     ):
         """``io_workers``: width of the checkpoint I/O pool shared by the
         save, convert and restore paths (None = process default;
@@ -108,6 +109,14 @@ class CheckpointManager:
         bounds chain length and lets GC collect old chains.  ``gc()`` never
         removes a step that a live delta references.  ``"dedup"`` /
         ``"all"`` keep their previous meaning (every save full).
+
+        Fan-out: ``registry`` (a
+        :class:`~repro.serve.registry.PublicationRegistry`) subscribes a
+        serving fleet to this run — every newly committed step is
+        published automatically (``_maybe_publish`` runs after ``save()``
+        and ``wait()``, so async saves announce as soon as their commit is
+        observed).  The newest committed step is always within
+        ``keep_last``, so a publication's disk fallback tier outlives GC.
         """
         if save_mode not in ("dedup", "all", "delta"):
             raise ValueError(
@@ -135,6 +144,8 @@ class CheckpointManager:
         # Committed manifests are immutable: memoize referenced_steps per
         # step so gc() doesn't re-parse keep_last manifests on every save.
         self._refs_cache: dict[int, set[int]] = {}
+        self.registry = registry
+        self._published_step: int | None = None
         self.config_fingerprint = dict(config_fingerprint or {})
         self.engine = (
             CheckpointEngine(workers=io_workers)
@@ -241,6 +252,7 @@ class CheckpointManager:
             if block:
                 self._drainer.wait()
             self.gc()
+            self._maybe_publish()
             return
         kw = dict(
             scalars=dict(scalars or {}),
@@ -254,6 +266,7 @@ class CheckpointManager:
             snap = snapshot_state(state)
             write_distributed(snap, self.plan, step, self.step_dir(step), **kw)
         self.gc()
+        self._maybe_publish()
 
     def wait(self) -> list[SaveResult]:
         res: list[SaveResult] = []
@@ -263,7 +276,37 @@ class CheckpointManager:
             res.extend(self._async.wait())
         if res or self._async is not None or self._drainer is not None:
             self.gc()
+        self._maybe_publish()
         return res
+
+    # ----------------------------------------------------------- publishing
+    def publish(self, step: int | None = None):
+        """Announce one committed step (default: newest) to the fan-out
+        registry — see :mod:`repro.serve`.  Returns the
+        :class:`~repro.serve.registry.Publication`, or None when there is
+        nothing committed yet."""
+        if self.registry is None:
+            raise ValueError("CheckpointManager has no publication registry")
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        pub = self.registry.publish(DistCheckpoint.open(self.step_dir(step)))
+        self._published_step = max(step, self._published_step or step)
+        return pub
+
+    def _maybe_publish(self) -> None:
+        """Publish the newest committed step not yet announced.  Runs after
+        every ``save()``/``wait()``: a synchronous save publishes
+        immediately, an async/drained save on the next call that observes
+        its commit."""
+        if self.registry is None:
+            return
+        step = self.latest_step()
+        if step is None or (
+            self._published_step is not None and step <= self._published_step
+        ):
+            return
+        self.publish(step)
 
     def close(self) -> None:
         if self._drainer is not None:

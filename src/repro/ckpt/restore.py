@@ -49,6 +49,8 @@ from repro.dist.sharding import ShardingPlan
 from repro.train.optimizer import TrainState
 
 __all__ = [
+    "build_param_arrays",
+    "params_from_source",
     "read_region_from_source",
     "read_region_from_dist",
     "state_from_source",
@@ -92,27 +94,36 @@ def read_region_from_source(
     engine = engine or default_engine()
     idx = engine.index_for(source, name, kind)
     region = _canon_region(region, idx.spec.runtime_shape)
-    shape = tuple(r.stop - r.start for r in region)
-    hits = idx.overlapping(region)
-    # Zero-fill only when the fragments don't tile the whole region (the
-    # remainder is alignment padding); fragments are pairwise disjoint so
-    # coverage is a plain sum.
-    total = math.prod(shape)
-    covered = sum(math.prod(hi - lo for lo, hi in ovs) for _, _, ovs in hits)
-    out = engine.alloc(shape, resolve_dtype(dtype), zero=covered < total)
-    for rank, e, ovs in hits:
-        shard = engine.read_fragment(source, rank, name, kind)
-        src_idx = tuple(
-            slice(s0 + (lo - a0), s0 + (hi - a0))
-            for (a0, _), (s0, _), (lo, hi) in zip(e.atom_slice, e.shard_slice, ovs)
-        )
-        dst_idx = tuple(
-            slice(lo - r.start, hi - r.start) for (lo, hi), r in zip(ovs, region)
-        )
-        # Direct assignment: one copy straight into the output, casting in
-        # place when dtypes differ — never an intermediate materialization.
-        out[dst_idx] = shard[src_idx]
-    return out
+
+    def build() -> np.ndarray:
+        shape = tuple(r.stop - r.start for r in region)
+        hits = idx.overlapping(region)
+        # Zero-fill only when the fragments don't tile the whole region (the
+        # remainder is alignment padding); fragments are pairwise disjoint so
+        # coverage is a plain sum.
+        total = math.prod(shape)
+        covered = sum(math.prod(hi - lo for lo, hi in ovs) for _, _, ovs in hits)
+        out = engine.alloc(shape, resolve_dtype(dtype), zero=covered < total)
+        for rank, e, ovs in hits:
+            shard = engine.read_fragment(source, rank, name, kind)
+            src_idx = tuple(
+                slice(s0 + (lo - a0), s0 + (hi - a0))
+                for (a0, _), (s0, _), (lo, hi) in zip(e.atom_slice, e.shard_slice, ovs)
+            )
+            dst_idx = tuple(
+                slice(lo - r.start, hi - r.start) for (lo, hi), r in zip(ovs, region)
+            )
+            # Direct assignment: one copy straight into the output, casting in
+            # place when dtypes differ — never an intermediate materialization.
+            out[dst_idx] = shard[src_idx]
+        return out
+
+    # Fan-out sources (share_regions, e.g. serve.PeerFragmentSource) pool
+    # identical region reads across a whole reader fleet: assembled once
+    # into the engine's byte-bounded cache, served to every reader.
+    if getattr(source, "share_regions", False):
+        return engine.shared_region(source, name, kind, region, dtype, build)
+    return build()
 
 
 # Historical name (the path predates the fragment-source generalization);
@@ -133,21 +144,32 @@ _FIELDS: tuple[tuple[str, StateKind], ...] = (
 )
 
 
-def _build_state(
+def _build_trees(
     reader,  # (name, kind, region, dtype) -> np.ndarray
     plan: ShardingPlan,
     jmesh: jax.sharding.Mesh,
-    step: int,
+    fields: tuple[tuple[str, StateKind], ...],
     stats: RestoreStats | None = None,
     engine: CheckpointEngine | None = None,
-) -> TrainState:
-    import jax.numpy as jnp
+    *,
+    names: set[str] | None = None,
+) -> dict[str, dict[str, jax.Array]]:
+    """Build the requested state trees as flat ``{field: {name: array}}``.
 
+    The engine of every full restore path: enumerates the device regions,
+    prefetches them concurrently, then materializes sharded jax arrays.
+    ``fields`` selects which state kinds to build (the full ladder for a
+    training resume, params-only for a serving reader) and ``names``
+    restricts to a parameter subset (delta-subscription in-place updates).
+    """
     engine = engine or default_engine()
     pspecs = plan.state_pspecs()
+    param_items = [
+        (n, s) for n, s in plan.param_specs.items() if names is None or n in names
+    ]
 
-    trees: dict[str, dict] = {}
-    for field, kind in _FIELDS:
+    trees: dict[str, dict[str, jax.Array]] = {}
+    for field, kind in fields:
         # Enumerate every (param, device-region) this state kind will
         # request and issue the reads concurrently up front; the
         # make_array callbacks below then serve from the prefetch table
@@ -156,7 +178,7 @@ def _build_state(
         shardings: dict[str, NamedSharding] = {}
         jobs: list[tuple[str, str, tuple[slice, ...]]] = []
         seen: set[tuple] = set()
-        for name, spec in plan.param_specs.items():
+        for name, spec in param_items:
             sharding = NamedSharding(jmesh, pspecs[field][name])
             shardings[name] = sharding
             shape = tuple(spec.runtime_shape)
@@ -172,8 +194,8 @@ def _build_state(
             for (n, _, canon), arr in zip(jobs, results)
         }
 
-        flat = {}
-        for name, spec in plan.param_specs.items():
+        flat: dict[str, jax.Array] = {}
+        for name, spec in param_items:
             dtype = spec.states[kind].dtype
             shape = tuple(spec.runtime_shape)
 
@@ -193,13 +215,36 @@ def _build_state(
             # staging storage can back the next parameter's reads.
             for key in [k for k in table if k[0] == name]:
                 engine.recycle(table.pop(key))
-        trees[field] = unflatten_from_paths(flat)
+        trees[field] = flat
+    return trees
+
+
+def _build_state(
+    reader,  # (name, kind, region, dtype) -> np.ndarray
+    plan: ShardingPlan,
+    jmesh: jax.sharding.Mesh,
+    step: int,
+    stats: RestoreStats | None = None,
+    engine: CheckpointEngine | None = None,
+) -> TrainState:
+    import jax.numpy as jnp
+
+    trees = _build_trees(reader, plan, jmesh, _FIELDS, stats, engine)
     return TrainState(
-        params=trees["params"],
-        exp_avg=trees["exp_avg"],
-        exp_avg_sq=trees["exp_avg_sq"],
+        params=unflatten_from_paths(trees["params"]),
+        exp_avg=unflatten_from_paths(trees["exp_avg"]),
+        exp_avg_sq=unflatten_from_paths(trees["exp_avg_sq"]),
         step=jnp.asarray(step, jnp.int32),
     )
+
+
+def _source_reader(source, engine: CheckpointEngine):
+    """Region reader serving straight fragment unions (DIRECT-shaped)."""
+
+    def reader(name, kind, region, dtype):
+        return read_region_from_source(source, name, kind, region, dtype, engine=engine)
+
+    return reader
 
 
 def state_from_source(
@@ -213,10 +258,7 @@ def state_from_source(
     """Restore a full TrainState from any fragment source (disk checkpoint
     or in-memory hot snapshot) via indexed region reads."""
     engine = engine or default_engine()
-
-    def reader(name, kind, region, dtype):
-        return read_region_from_source(source, name, kind, region, dtype, engine=engine)
-
+    reader = _source_reader(source, engine)
     return _build_state(reader, plan, jmesh, int(source.manifest.step), stats, engine)
 
 
@@ -255,6 +297,18 @@ def state_from_stream(
     every transform class by construction.
     """
     engine = engine or default_engine()
+    reader = _stream_reader(source, plan, transforms, engine)
+    return _build_state(reader, plan, jmesh, int(source.manifest.step), stats, engine)
+
+
+def _stream_reader(
+    source,
+    plan: ShardingPlan,
+    transforms: Mapping[str, ParamTransform],
+    engine: CheckpointEngine,
+):
+    """The per-param plan-table region reader behind ``state_from_stream``
+    (shared with the params-only serving restore)."""
     src_params = source.manifest.params
 
     def reader(name, kind, region, dtype):
@@ -299,7 +353,62 @@ def state_from_stream(
         engine.recycle(inner)
         return out
 
-    return _build_state(reader, plan, jmesh, int(source.manifest.step), stats, engine)
+    return reader
+
+
+def build_param_arrays(
+    source,
+    plan: ShardingPlan,
+    jmesh: jax.sharding.Mesh,
+    *,
+    transforms: Mapping[str, ParamTransform] | None = None,
+    names: set[str] | None = None,
+    stats: RestoreStats | None = None,
+    engine: CheckpointEngine | None = None,
+) -> dict[str, jax.Array]:
+    """Materialize sharded *weight* arrays from a fragment source, flat.
+
+    The serving-side building block: a flat ``{name: jax.Array}`` dict of
+    FP32 parameter state only — no optimizer moments, so a fleet of
+    inference replicas pays one third of a training restore's memory and
+    I/O.  ``transforms=None`` means the source layout equals the target
+    (straight fragment unions); a plan table from
+    :func:`repro.core.plan.stream_transforms` streams a layout change.
+    ``names`` restricts to a parameter subset — how a delta subscription
+    updates a live replica in place (fetch only the changed params).
+    """
+    engine = engine or default_engine()
+    reader = (
+        _source_reader(source, engine)
+        if transforms is None
+        else _stream_reader(source, plan, transforms, engine)
+    )
+    trees = _build_trees(
+        reader, plan, jmesh, (("params", StateKind.FP32),), stats, engine,
+        names=names,
+    )
+    return trees["params"]
+
+
+def params_from_source(
+    source,
+    plan: ShardingPlan,
+    jmesh: jax.sharding.Mesh,
+    stats: RestoreStats | None = None,
+    *,
+    transforms: Mapping[str, ParamTransform] | None = None,
+    engine: CheckpointEngine | None = None,
+):
+    """Weights-only restore: the params pytree, resharded onto ``jmesh``.
+
+    Same region reads as :func:`state_from_source` /
+    :func:`state_from_stream` restricted to FP32 — bit-identical to the
+    ``.params`` tree of the corresponding full restore.
+    """
+    flat = build_param_arrays(
+        source, plan, jmesh, transforms=transforms, stats=stats, engine=engine
+    )
+    return unflatten_from_paths(flat)
 
 
 def state_from_ucp(

@@ -595,6 +595,53 @@ class CheckpointEngine:
         loader runs outside the cache lock by design).
         """
         key = f"{source_cache_key(source)}::atom::{name}@{getattr(kind, 'value', kind)}"
+        return self._single_flight(key, builder)
+
+    def shared_region(
+        self,
+        source,
+        name: str,
+        kind,
+        region: Sequence[slice],
+        dtype,
+        builder: Callable[[], np.ndarray],
+    ) -> np.ndarray:
+        """Memoized region read — the *serving hot set* for fan-out sources.
+
+        A fleet of readers restoring onto the same target layout requests
+        the same ``(source, param, kind, region)`` tuples over and over;
+        sources that opt in (``share_regions = True``, e.g.
+        ``repro.serve.PeerFragmentSource``) get each distinct region
+        assembled once and then served to every reader from the engine's
+        byte-bounded atom cache — the fan-out analogue of the consolidated-
+        atom cache, one level finer.  Single-flight per key, so N readers
+        racing on a cold region build it once, not N times.
+
+        The cached array is shared: consumers must treat it as read-only
+        (the restore paths copy out of staging buffers by construction,
+        and ``engine.recycle`` of a cached array is safe — arena
+        reclamation is refcount-gated and the cache entry keeps the view
+        chain alive until eviction).
+        """
+        kv = getattr(kind, "value", kind)
+        span = ",".join(f"{r.start}:{r.stop}" for r in region)
+        key = (
+            f"{source_cache_key(source)}::region::{name}@{kv}"
+            f"::{np.dtype(resolve_dtype(dtype) if isinstance(dtype, str) else dtype).str}"
+            f"::{span}"
+        )
+        return self._single_flight(key, builder)
+
+    def memo(self, key: str, builder: Callable[[], Any]) -> Any:
+        """Single-flight memoization under an explicit key in the atom
+        cache — for derived-value sharing that doesn't fit the region or
+        atom key schema (e.g. a serving fleet's built param-array set,
+        shared across replica threads because ``jax.Array`` is immutable).
+        Keys should start with the owning source's ``cache_key`` so
+        :meth:`invalidate` of that root clears them too."""
+        return self._single_flight(key, builder)
+
+    def _single_flight(self, key: str, builder: Callable[[], np.ndarray]) -> np.ndarray:
         with self._atom_locks_lock:
             lock = self._atom_locks.setdefault(key, threading.Lock())
         with lock:

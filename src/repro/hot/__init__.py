@@ -28,7 +28,14 @@ from .recovery import (
     reshard_compatible,
     state_from_hot,
 )
-from .replicate import ReplicaStats, ReplicationPolicy, buddy_group, place_holders
+from .replicate import (
+    ReplicaStats,
+    ReplicationPolicy,
+    binomial_parent,
+    buddy_group,
+    fanout_ladder,
+    place_holders,
+)
 from .snapshot import HotFragment, HotSnapshot, HotTier
 
 __all__ = [
@@ -40,7 +47,9 @@ __all__ = [
     "state_from_hot",
     "ReplicaStats",
     "ReplicationPolicy",
+    "binomial_parent",
     "buddy_group",
+    "fanout_ladder",
     "place_holders",
     "HotFragment",
     "HotSnapshot",

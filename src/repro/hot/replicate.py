@@ -22,6 +22,20 @@ Two sources of redundancy compose:
 Placement is pure math over the layout (no arrays move here); the tier's
 capture path copies bytes once per *stored* fragment regardless of how
 many holders record it.
+
+**Binomial fan-out trees** (``binomial_parent`` / ``fanout_ladder``)
+generalize the buddy idea from *redundancy* to *distribution*: where a
+buddy group answers "who mirrors rank r's fragment", the binomial tree
+answers "whom should the p-th consumer of a shard fetch it from" so that
+one disk read fans out to N readers in O(log N) per-node load.  Node p's
+parent is p with its highest set bit cleared — the classic binomial-tree
+broadcast shape (node 0 is the first fetcher, fed by the root tier, e.g.
+disk): every node's children are ``p + 2^k`` for each k above its own
+width, so no node serves more than O(log N) peers.  The serving fan-out
+tier (``repro.serve``) walks ``fanout_ladder(p)`` — the ancestor chain,
+nearest first — as its fetch-preference order, with the remaining holders
+and finally the root tier as fallbacks when an ancestor is gone or fails
+digest verification.
 """
 
 from __future__ import annotations
@@ -30,7 +44,44 @@ import dataclasses
 
 from repro.core.layout import ShardLayout
 
-__all__ = ["ReplicationPolicy", "ReplicaStats", "buddy_group", "place_holders"]
+__all__ = [
+    "ReplicationPolicy",
+    "ReplicaStats",
+    "binomial_parent",
+    "buddy_group",
+    "fanout_ladder",
+    "place_holders",
+]
+
+
+def binomial_parent(index: int) -> int | None:
+    """Parent of node ``index`` in the binomial broadcast tree (None for 0).
+
+    Clears the highest set bit: 1→0, 2→0, 3→1, 11→3, ... — node 0 is the
+    tree root (the first fetcher, fed directly by the root tier).
+    """
+    if index < 0:
+        raise ValueError(f"index must be >= 0, got {index}")
+    if index == 0:
+        return None
+    return index ^ (1 << (index.bit_length() - 1))
+
+
+def fanout_ladder(index: int) -> list[int]:
+    """Ancestor chain of node ``index``, nearest first, ending at 0.
+
+    ``fanout_ladder(11) == [3, 1, 0]`` — the fetch-preference order of the
+    11th consumer of a shard: try the parent, then each higher ancestor,
+    and only then fall back outside the tree.  Length is O(log index) =
+    popcount(index), which is what bounds any single node's serving load.
+    """
+    if index < 0:
+        raise ValueError(f"index must be >= 0, got {index}")
+    out: list[int] = []
+    while index > 0:
+        index ^= 1 << (index.bit_length() - 1)
+        out.append(index)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)

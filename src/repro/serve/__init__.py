@@ -1,0 +1,44 @@
+"""Checkpoint fan-out: publish committed checkpoints to a serving fleet.
+
+The first inference-side subsystem of the repo (DESIGN.md §7): one
+training job announces each committed step to a
+:class:`PublicationRegistry`; N resharding readers subscribe and restore
+through :class:`PeerFragmentSource` — the engine's
+:class:`~repro.core.engine.FragmentSource` protocol served from *peer
+replicas that already hold the bytes*, in binomial-tree order, with disk
+as the root and fallback tier.  The result is O(1) disk traffic for an
+N-reader fleet:
+
+* every peer-fetched shard is verified against the publication's content
+  digest — a corrupt copy evicts the holder and transparently re-fetches
+  from the next tier, never silently;
+* readers sharing an engine also share the *serving hot set*
+  (:meth:`~repro.core.engine.CheckpointEngine.shared_region` + the
+  consolidated-atom cache keyed by the publication): each target region
+  and each fused/averaged atom is assembled once per fleet;
+* steady-state publishes are *delta-aware*: the announcement carries the
+  changed-shard set, and a current :class:`FleetReplica` updates in place
+  by fetching only the diff.
+
+Wire a registry into :class:`~repro.ckpt.manager.CheckpointManager`
+(``registry=``) and every committed save is published automatically.
+
+* :mod:`repro.serve.registry` — publications, subscriptions, the
+  content-addressed peer byte store
+* :mod:`repro.serve.peer`     — ``PeerFragmentSource`` + the fetch ladder
+* :mod:`repro.serve.fleet`    — ``FleetReplica``: subscribe → restore →
+  in-place delta updates
+"""
+
+from .fleet import FleetReplica
+from .peer import FanoutStats, PeerFragmentSource
+from .registry import Publication, PublicationRegistry, Subscription
+
+__all__ = [
+    "FanoutStats",
+    "FleetReplica",
+    "PeerFragmentSource",
+    "Publication",
+    "PublicationRegistry",
+    "Subscription",
+]

@@ -1,0 +1,191 @@
+"""PeerFragmentSource: serve checkpoint fragments from the fleet, not disk.
+
+The third :class:`~repro.core.engine.FragmentSource` implementation (after
+the disk :class:`~repro.core.dist_ckpt.DistCheckpoint` and the in-memory
+:class:`~repro.hot.snapshot.HotSnapshot`): one reader's view of one
+:class:`~repro.serve.registry.Publication`.  Every restore path — indexed
+region reads, the streaming reshard plan table, in-memory consolidation —
+works on it unchanged; what changes is where the bytes come from.
+
+**The fetch ladder** (DESIGN.md §7), per shard:
+
+1. *local* — this reader already fetched and verified it;
+2. *peers, binomial-tree order* — the reader's tree position is the
+   current holder count ``p``; it tries the holders at positions
+   ``fanout_ladder(p)`` (parent, then each higher ancestor — the shape
+   that bounds any holder's serving load at O(log N)), then any remaining
+   holder;
+3. *disk* — the published checkpoint's shard file, read fresh
+   (never through a shared handle cache: the disk-bytes census must count
+   every real disk touch, and peers are supposed to make them rare).
+
+Every peer-fetched buffer is verified against the publication's content
+digest before use; a mismatch evicts the corrupt holder from the registry
+and transparently falls to the next tier (``refetches`` in the stats) —
+never silent.  Disk is the last tier, so a corrupt *file* raises
+:class:`~repro.core.tensor_io.IntegrityError` loudly.
+
+Fetches of one shard are single-flight across the fleet (a per-content-key
+lock), so a thundering herd on a cold shard costs one disk read, with the
+winner immediately serving the rest as a peer.
+
+``share_regions = True`` opts into the engine's serving hot set
+(:meth:`~repro.core.engine.CheckpointEngine.shared_region`): readers that
+also share an engine (replica threads on one serving host) get each
+assembled target region — and each consolidated atom, via the shared
+``cache_key`` — built once per fleet rather than once per reader.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.core.dist_ckpt import shard_digest_key, writing_ranks_for
+from repro.core.patterns import StateKind
+from repro.core.tensor_io import IntegrityError, digest_matches
+from repro.hot.replicate import fanout_ladder
+
+from .registry import Publication, PublicationRegistry
+
+__all__ = ["FanoutStats", "PeerFragmentSource"]
+
+
+@dataclasses.dataclass
+class FanoutStats:
+    """Thread-safe accounting of one fleet's (or one reader's) fetches."""
+
+    disk_fetches: int = 0
+    disk_bytes_read: int = 0
+    peer_fetches: int = 0
+    peer_bytes_read: int = 0
+    local_hits: int = 0
+    digest_failures: int = 0
+    refetches: int = 0
+
+    def __post_init__(self) -> None:
+        self._lock = threading.Lock()
+
+    def _add(self, field: str, n: int = 1) -> None:
+        with self._lock:
+            setattr(self, field, getattr(self, field) + n)
+
+
+class PeerFragmentSource:
+    """One reader's FragmentSource over a publication + the peer store."""
+
+    # Opt into CheckpointEngine.shared_region pooling (see module docstring).
+    share_regions = True
+
+    def __init__(
+        self,
+        registry: PublicationRegistry,
+        publication: Publication,
+        reader_id: str,
+        *,
+        stats: FanoutStats | None = None,
+    ):
+        self.registry = registry
+        self.publication = publication
+        self.reader_id = str(reader_id)
+        self.stats = stats or FanoutStats()
+        self._ckpt = publication.checkpoint
+        # Shards this reader fetched and verified (it is a registered
+        # holder of exactly these).
+        self._local: dict[str, np.ndarray] = {}
+        self._local_lock = threading.Lock()
+
+    # --------------------------------------------------- FragmentSource API
+    @property
+    def manifest(self):
+        return self.publication.manifest
+
+    @property
+    def cache_key(self) -> str:
+        """Shared across every reader of the same publication — fragment
+        indexes, consolidated atoms and shared regions are per-*fleet*
+        cache entries, not per-reader (content identity is the publication,
+        which is immutable)."""
+        return f"pub://{self.registry.uid}/seq{self.publication.seq}"
+
+    def writing_ranks(self, name: str, kind: StateKind) -> list[int]:
+        spec = self.manifest.params[name]
+        layout = spec.layout_for(kind, self.manifest.mesh)
+        return writing_ranks_for(spec, layout, self.manifest.save_mode)
+
+    def read_fragment(
+        self, rank: int, name: str, kind: StateKind, *, engine=None
+    ) -> np.ndarray:
+        key = shard_digest_key(rank, name, kind)
+        digest = self.publication.digests.get(key)
+        if digest is None:
+            raise KeyError(
+                f"publication seq {self.publication.seq} carries no digest "
+                f"for {key}; cannot fetch it safely"
+            )
+        skey = f"{key}@{digest}"
+        with self._local_lock:
+            held = self._local.get(skey)
+        if held is not None:
+            self.stats._add("local_hits")
+            return held
+        # Single-flight per content key across the fleet: a cold shard is
+        # fetched once (one disk read) and the winner serves the rest.
+        with self.registry.fetch_lock(skey):
+            with self._local_lock:
+                held = self._local.get(skey)
+            if held is not None:
+                self.stats._add("local_hits")
+                return held
+            data = self._fetch_verified(skey, digest, rank, name, kind)
+            self.registry.register_holder(self.reader_id, skey, data)
+            with self._local_lock:
+                self._local[skey] = data
+            return data
+
+    # ------------------------------------------------------- fetch ladder
+    def _fetch_verified(
+        self, skey: str, digest: str, rank: int, name: str, kind: StateKind
+    ) -> np.ndarray:
+        holders = self.registry.holders(skey)
+        position = len(holders)  # this reader's fan-out tree node index
+        ladder = [i for i in fanout_ladder(position) if i < len(holders)]
+        order = [holders[i] for i in ladder]
+        order += [h for h in holders if h not in order and h != self.reader_id]
+        tried = 0
+        for holder in order:
+            data = self.registry.fetch(skey, holder)
+            if data is None:
+                continue  # holder evicted between listing and fetch
+            tried += 1
+            if digest_matches(data, digest):
+                self.stats._add("peer_fetches")
+                self.stats._add("peer_bytes_read", int(data.nbytes))
+                if tried > 1:
+                    self.stats._add("refetches")
+                return data
+            # Corrupt peer copy: evict the holder, fall to the next tier —
+            # detected, counted, never silently served.
+            self.stats._add("digest_failures")
+            self.registry.drop_holder(skey, holder)
+        # Root tier: the published checkpoint on disk.  Read fresh (no
+        # shared handle cache) so the disk-bytes census reflects reality.
+        data = self._ckpt.read_shard(rank, name, kind, mmap=False)
+        self.stats._add("disk_fetches")
+        self.stats._add("disk_bytes_read", int(data.nbytes))
+        if tried:
+            self.stats._add("refetches")
+        if not digest_matches(data, digest):
+            raise IntegrityError(
+                f"{skey}: disk copy at {self._ckpt.shard_path(rank, name, kind)} "
+                f"does not match the published digest (last fetch tier)"
+            )
+        return data
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def held_nbytes(self) -> int:
+        with self._local_lock:
+            return sum(a.nbytes for a in self._local.values())

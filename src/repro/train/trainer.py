@@ -68,6 +68,7 @@ class Trainer:
         async_save: bool = True,
         save_mode: str = "dedup",
         full_interval: int = 8,
+        registry=None,
         grad_transform=None,
     ) -> "Trainer":
         mesh_spec = MeshSpec.from_mesh(jmesh)
@@ -89,6 +90,7 @@ class Trainer:
                 async_save=async_save,
                 save_mode=save_mode,
                 full_interval=full_interval,
+                registry=registry,
                 config_fingerprint={
                     "model": cfg.fingerprint(),
                     "parallel": parallel.fingerprint(),
