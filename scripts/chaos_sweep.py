@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Chaos-sweep CLI: replay seeded fault schedules against the recovery
+ladder (see DESIGN.md §8 and repro.chaos).
+
+Fast smoke (CI PR lane):        chaos_sweep.py --seed-list 0,1,2 --events 8
+Nightly bounded sweep:          chaos_sweep.py --seeds 25 --shrink --artifact chaos-failures.json
+Replay one fallen seed locally: chaos_sweep.py --seed 17 --events 12 --shrink
+
+Exit code 1 when any seed violates the ladder invariant; with --shrink
+each failure is reduced to its minimal fault prefix and printed as a
+ready-to-paste regression test.  --artifact writes the failing schedules
+as JSON (what the nightly lane uploads).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.chaos.sweep import (  # noqa: E402
+    emit_regression_test,
+    failing_artifact,
+    run_seed,
+    shrink,
+    SweepResult,
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    g = ap.add_mutually_exclusive_group()
+    g.add_argument("--seeds", type=int, default=None,
+                   help="sweep seeds 0..N-1")
+    g.add_argument("--seed-list", type=str, default=None,
+                   help="comma-separated explicit seeds")
+    g.add_argument("--seed", type=int, default=None,
+                   help="one seed")
+    ap.add_argument("--events", type=int, default=12,
+                    help="train/save events per seed (default 12)")
+    ap.add_argument("--shrink", action="store_true",
+                    help="shrink failing schedules to their minimal prefix "
+                         "and print regression tests")
+    ap.add_argument("--artifact", type=Path, default=None,
+                    help="write failing schedules as JSON to this path")
+    args = ap.parse_args()
+
+    if args.seed is not None:
+        seeds = [args.seed]
+    elif args.seed_list is not None:
+        seeds = [int(s) for s in args.seed_list.split(",") if s.strip()]
+    else:
+        seeds = list(range(args.seeds if args.seeds is not None else 25))
+
+    reports = []
+    t0 = time.time()
+    for seed in seeds:
+        rep = run_seed(seed, events=args.events)
+        status = "ok" if rep.ok else "FAIL"
+        faults = next(
+            (line for line in rep.log if line.startswith("fired:")), "fired: none"
+        )
+        print(f"  seed {seed:>4}: {status:4} "
+              f"({rep.events_completed}/{args.events} events; "
+              f"{faults.split(chr(10))[0][7:80]})")
+        reports.append(rep)
+    result = SweepResult(reports)
+    print(f"{result.describe()}  [{time.time() - t0:.1f}s]")
+
+    if args.artifact is not None and result.failed:
+        args.artifact.write_text(json.dumps(failing_artifact(result), indent=1))
+        print(f"failing schedules written to {args.artifact}")
+
+    if args.shrink:
+        for rep in result.failed:
+            shrunk = shrink(rep, events=args.events)
+            print(f"\nseed {rep.seed} shrunk to {len(shrunk.schedule)} fault(s); "
+                  "regression test:\n")
+            print(emit_regression_test(shrunk, events=args.events))
+
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,12 @@
 # order-of-magnitude perf regression or a broken recording fails in CI
 # rather than on the next real benchmark run.
 #
-# Usage: scripts/ci.sh [--fast] [extra pytest args...]
+# Stage 4 — chaos smoke (opt-in, --chaos-smoke): three fixed seeds through
+# the deterministic fault-injection harness (scripts/chaos_sweep.py), so a
+# regression in the recovery ladder fails the PR lane in seconds; the
+# nightly lane runs the full bounded sweep separately.
+#
+# Usage: scripts/ci.sh [--fast] [--chaos-smoke] [extra pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -28,10 +33,14 @@ trap cleanup EXIT
 trap on_err ERR
 
 PYTEST_ARGS=()
-if [[ "${1:-}" == "--fast" ]]; then
-    shift
-    PYTEST_ARGS+=(-m "not slow")
-fi
+chaos_smoke=0
+while [[ $# -gt 0 ]]; do
+    case "$1" in
+        --fast) PYTEST_ARGS+=(-m "not slow"); shift ;;
+        --chaos-smoke) chaos_smoke=1; shift ;;
+        *) break ;;
+    esac
+done
 
 stage="tracked-bytecode-guard"
 # Committed .pyc files churn on every run and bloat diffs; they were purged
@@ -98,5 +107,10 @@ PY
 
 stage="bench-compare"
 python scripts/bench_compare.py "$smoke_json" BENCH_checkpointing.json
+
+if [[ "$chaos_smoke" == 1 ]]; then
+    stage="chaos-smoke"
+    python scripts/chaos_sweep.py --seed-list 0,1,2 --events 8
+fi
 
 stage="done"

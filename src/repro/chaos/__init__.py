@@ -1,0 +1,66 @@
+"""Deterministic chaos harness for the UCP recovery ladder.
+
+Layering matters here: production modules (``repro.ckpt.saver``,
+``repro.hot.drain``, ...) import :mod:`repro.chaos.points` — and only
+that — for their ``fault_point()`` hooks, while the harness/invariant
+side imports those production modules back.  This ``__init__`` therefore
+eagerly re-exports only the points layer and resolves everything else
+lazily (PEP 562), so importing a production module never drags the whole
+harness (and a circular import) in behind it.
+"""
+
+from __future__ import annotations
+
+from .points import (
+    CATALOG,
+    FaultError,
+    activate,
+    active_controller,
+    deactivate,
+    fault_point,
+)
+
+__all__ = [
+    "CATALOG",
+    "ChaosController",
+    "ChaosHarness",
+    "ChaosReport",
+    "FaultError",
+    "FaultSpec",
+    "InvariantViolation",
+    "Schedule",
+    "activate",
+    "active_controller",
+    "check_invariants",
+    "deactivate",
+    "fault_point",
+    "generate_schedule",
+    "run_seed",
+    "shrink",
+    "sweep",
+]
+
+_LAZY = {
+    "ChaosController": "schedule",
+    "FaultSpec": "schedule",
+    "Schedule": "schedule",
+    "generate_schedule": "schedule",
+    "InvariantViolation": "invariants",
+    "Violation": "invariants",
+    "check_invariants": "invariants",
+    "ChaosHarness": "harness",
+    "ChaosReport": "harness",
+    "run_seed": "sweep",
+    "shrink": "sweep",
+    "sweep": "sweep",
+    "emit_regression_test": "sweep",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

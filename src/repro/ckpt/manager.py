@@ -41,6 +41,7 @@ from typing import Any, Mapping
 
 import jax
 
+from repro.chaos.points import fault_point
 from repro.core.atoms import UcpCheckpoint
 from repro.core.convert import ConvertStats, convert_to_ucp
 from repro.core.dist_ckpt import DistCheckpoint
@@ -237,6 +238,7 @@ class CheckpointManager:
         self, state: TrainState, step: int, *, scalars: Mapping[str, Any] | None = None,
         block: bool = False,
     ) -> None:
+        fault_point("manager.save.begin", step=step, block=block)
         # A re-save into an existing step replaces its manifest: the memoized
         # reference set is stale the moment the save starts.
         self._refs_cache.pop(step, None)
@@ -269,14 +271,21 @@ class CheckpointManager:
         self._maybe_publish()
 
     def wait(self) -> list[SaveResult]:
+        # try/finally ladder: a drainer failure must not leave async-saver
+        # errors undrained (or vice versa), and GC/publish still observe
+        # whatever *did* commit before the error surfaced.
         res: list[SaveResult] = []
-        if self._drainer is not None:
-            res.extend(self._drainer.wait())
-        if self._async is not None:
-            res.extend(self._async.wait())
-        if res or self._async is not None or self._drainer is not None:
-            self.gc()
-        self._maybe_publish()
+        try:
+            if self._drainer is not None:
+                res.extend(self._drainer.wait())
+        finally:
+            try:
+                if self._async is not None:
+                    res.extend(self._async.wait())
+            finally:
+                if self._async is not None or self._drainer is not None:
+                    self.gc()
+                self._maybe_publish()
         return res
 
     # ----------------------------------------------------------- publishing
@@ -309,12 +318,18 @@ class CheckpointManager:
         self.publish(step)
 
     def close(self) -> None:
-        if self._drainer is not None:
-            self._drainer.close()
-        if self._async is not None:
-            self._async.close()
-        if self.hot is not None:
-            self.hot.clear()
+        # Same discipline as wait(): every component closes (and surfaces
+        # its background errors) even when an earlier one raises.
+        try:
+            if self._drainer is not None:
+                self._drainer.close()
+        finally:
+            try:
+                if self._async is not None:
+                    self._async.close()
+            finally:
+                if self.hot is not None:
+                    self.hot.clear()
 
     # ----------------------------------------------------------------- lookup
     def steps(self) -> list[int]:
@@ -353,9 +368,26 @@ class CheckpointManager:
         when a newer save already committed — an older queued save may
         legitimately commit *after* a newer synchronous one.
         """
-        steps = self.steps()
+        fault_point("manager.gc.begin")
+        # Read order matters: in-flight BEFORE committed.  A background save
+        # commits and *then* leaves the pending set; reading pending first
+        # means any save gone from `inflight` is already visible in `steps`
+        # (pending_roots() and the discard share a lock).  The reverse order
+        # has a window — commit + discard between the two reads — where a
+        # just-committed delta is in neither set, its base pin gets pruned
+        # below, and the base is collected under a live manifest.  Found by
+        # the chaos harness (crash schedules on drain.pre_commit).
         inflight = self._inflight_roots()
+        steps = self.steps()
         keep: set[int] = set(steps[-self.keep_last:]) if self.keep_last else set(steps)
+        if self.registry is not None:
+            # The fleet's disk-fallback tier: the currently-published step
+            # must outlive GC even when newer commits have pushed it past
+            # keep_last (a crash between commit and announce leaves the
+            # fleet reading the older publication indefinitely).
+            pub = self.registry.current()
+            if pub is not None and pub.step in steps:
+                keep.add(pub.step)
         # Expand with every step a kept chain references.  Provenance is
         # flattened in each manifest, but walk to a fixpoint anyway so a
         # kept base that is itself a delta keeps *its* ancestors too.
@@ -381,10 +413,18 @@ class CheckpointManager:
             self._pinned_chains = {
                 r: c for r, c in self._pinned_chains.items() if r in inflight
             }
-        for s in steps:
+        # Delete newest-first: delta references only point backwards, so a
+        # GC interrupted mid-loop (crash) then leaves no surviving committed
+        # manifest referencing an already-deleted ancestor — oldest-first had
+        # exactly that window (found by the chaos harness: crash on
+        # manager.gc.delete while a doomed chain was being collected).
+        for s in sorted(steps, reverse=True):
             step_dir = self.step_dir(s)
             if s in keep or step_dir in inflight:
                 continue
+            # Outside the pin lock (a paused thread here must not block the
+            # base loader); the pin set is still re-read under the lock below.
+            fault_point("manager.gc.delete", step=s)
             # Per-deletion critical section, shared with the delta base
             # loader: the pin set is re-read right before the rmtree, so a
             # base resolved concurrently is either already pinned (skip) or
@@ -410,6 +450,7 @@ class CheckpointManager:
                     and p not in inflight
                     and p.name < newest.name
                 ):
+                    fault_point("manager.gc.wreckage", path=p.name)
                     shutil.rmtree(p, ignore_errors=True)
 
     # ---------------------------------------------------------------- restore
@@ -444,6 +485,7 @@ class CheckpointManager:
         step = step if step is not None else self.latest_step()
         if step is None:
             return None
+        fault_point("manager.restore.begin", step=step)
         t0 = time.perf_counter()
         ckpt = DistCheckpoint.open(self.step_dir(step))
         if verify:

@@ -27,6 +27,7 @@ from typing import Any, Callable, Mapping
 import jax
 import numpy as np
 
+from repro.chaos.points import fault_point
 from repro.core.dist_ckpt import (
     DistCheckpoint,
     DistManifest,
@@ -157,6 +158,7 @@ def write_distributed(
 
     def write_one(job) -> tuple[int, str, str, bool]:
         rank, name, kind, arr, layout = job
+        fault_point("saver.shard", step=step, rank=rank, name=name, kind=kind.value)
         key = shard_digest_key(rank, name, kind)
         entries = layout.entries[rank]
         contiguous_view = None
@@ -221,6 +223,7 @@ def write_distributed(
             flatten_provenance(
                 manifest, base, [k for _, k, _, inh in results if inh]
             )
+        fault_point("saver.pre_manifest", step=step, mode=save_mode)
         ckpt.rewrite_manifest()
         # A re-save into an existing directory must not leave readers on
         # stale handles of the replaced files (os.replace keeps old inodes
@@ -235,6 +238,7 @@ def write_distributed(
             engine.close()
     if base is not None:
         check_chain_committed(ckpt)
+    fault_point("saver.pre_commit", step=step, mode=save_mode)
     ckpt.commit()
     return SaveResult(
         step,
@@ -334,9 +338,16 @@ class AsyncSaver:
         return out
 
     def check(self) -> None:
+        # Drain *all* accumulated failures, not just the oldest: a caller
+        # that catches one wait() error must not find stale errors from the
+        # same batch resurfacing on an unrelated later call.  The first
+        # failure becomes the cause; the rest ride along on ``.failures``.
         if self._errors:
-            err = self._errors.pop(0)
-            raise RuntimeError("async checkpoint save failed") from err
+            errs, self._errors = self._errors[:], []
+            suffix = f" ({len(errs)} failures)" if len(errs) > 1 else ""
+            err = RuntimeError(f"async checkpoint save failed{suffix}")
+            err.failures = tuple(errs)
+            raise err from errs[0]
 
     def close(self) -> None:
         if self._closed:

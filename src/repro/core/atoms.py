@@ -23,12 +23,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 from pathlib import Path
 from typing import Any, Mapping
 
 import numpy as np
 
+from . import clock
 from .patterns import StateKind, STATE_KINDS
 from .tensor_io import load_tensor, open_memmap, save_tensor
 
@@ -134,7 +134,7 @@ class UcpCheckpoint:
     def create(cls, root: str | os.PathLike, manifest: UcpManifest) -> "UcpCheckpoint":
         root = Path(root)
         (root / "atoms").mkdir(parents=True, exist_ok=True)
-        manifest.created_at = time.time()
+        manifest.created_at = clock.now()  # injectable: see repro.core.clock
         ckpt = cls(root, manifest)
         ckpt._write_manifest()
         return ckpt
@@ -159,7 +159,7 @@ class UcpCheckpoint:
     def commit(self) -> None:
         tmp = self.root / "COMMIT.tmp"
         with open(tmp, "w") as f:
-            f.write(json.dumps({"step": self.manifest.step, "t": time.time()}))
+            f.write(json.dumps({"step": self.manifest.step, "t": clock.now()}))
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self.commit_path)

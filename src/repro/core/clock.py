@@ -1,0 +1,52 @@
+"""Injectable wall clock for commit/GC time stamps.
+
+Every wall-clock read on a checkpoint *commit or GC boundary* goes through
+:func:`now` instead of ``time.time()`` directly.  In production the two
+are identical; under the chaos harness (:mod:`repro.chaos`) the clock is
+a schedulable fault — ``skew()`` shifts it deterministically, ``set_source``
+replaces it outright — so clock-skewed GC and commit-marker timestamps are
+testable behaviors, not flakes.  Discovery and GC order checkpoints by
+*step directory name*, never by these stamps, so a skewed clock can shift
+what ``created_at``/COMMIT record but can never change which step GC or
+resume considers "newest"; the invariant checker relies on that.
+
+Perf-path reads (``time.perf_counter`` benchmarking) are deliberately NOT
+routed through here: they measure the harness itself and must stay real.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from typing import Callable
+
+__all__ = ["now", "skew", "set_source", "reset"]
+
+_offset: float = 0.0
+_source: Callable[[], float] | None = None
+
+
+def now() -> float:
+    """Current wall-clock time as the checkpoint layer sees it."""
+    src = _source
+    base = src() if src is not None else _time.time()
+    return base + _offset
+
+
+def skew(seconds: float) -> float:
+    """Shift the clock by ``seconds`` (cumulative); returns the new offset."""
+    global _offset
+    _offset += float(seconds)
+    return _offset
+
+
+def set_source(fn: Callable[[], float] | None) -> None:
+    """Replace the underlying time source (None restores ``time.time``)."""
+    global _source
+    _source = fn
+
+
+def reset() -> None:
+    """Back to the real clock, zero skew."""
+    global _offset, _source
+    _offset = 0.0
+    _source = None

@@ -35,12 +35,14 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-import time
 from pathlib import Path
 from typing import Any, Iterator, Mapping
 
 import numpy as np
 
+from repro.chaos.points import fault_point
+
+from . import clock
 from .layout import MeshSpec, ShardLayout
 from .patterns import ParamSpec, StateKind
 from .tensor_io import content_digest, dtype_name, load_tensor, save_tensor
@@ -316,7 +318,9 @@ class DistCheckpoint:
     def create(cls, root: str | os.PathLike, manifest: DistManifest) -> "DistCheckpoint":
         root = Path(root)
         root.mkdir(parents=True, exist_ok=True)
-        manifest.created_at = time.time()
+        # Injectable clock: stamps are informational only (discovery and GC
+        # order by step directory name), so skew is testable, not load-bearing.
+        manifest.created_at = clock.now()
         ckpt = cls(root, manifest)
         ckpt.rewrite_manifest()
         return ckpt
@@ -354,12 +358,14 @@ class DistCheckpoint:
         A checkpoint directory without COMMIT is treated as garbage by
         discovery (crash-during-save safety).
         """
+        fault_point("dist.pre_commit", step=self.manifest.step, root=str(self.root))
         tmp = self.root / "COMMIT.tmp"
         with open(tmp, "w") as f:
-            f.write(json.dumps({"step": self.manifest.step, "t": time.time()}))
+            f.write(json.dumps({"step": self.manifest.step, "t": clock.now()}))
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, self.commit_path)
+        fault_point("dist.committed", step=self.manifest.step, root=str(self.root))
 
     # ------------------------------------------------------------------- read
     @classmethod

@@ -25,6 +25,7 @@ import time
 from pathlib import Path
 from typing import Callable
 
+from repro.chaos.points import fault_point
 from repro.core.dist_ckpt import (
     DistCheckpoint,
     DistManifest,
@@ -137,6 +138,8 @@ def persist_snapshot(
 
     def write_one(job) -> int:
         name, kind, rank, data = job
+        fault_point("drain.shard", step=m.step, rank=rank, name=name,
+                    kind=kind.value)
         written = ckpt.write_shard(rank, name, kind, data, fsync=serial)
         if not serial:
             fsync_path(ckpt.own_shard_path(rank, name, kind))
@@ -146,6 +149,8 @@ def persist_snapshot(
     engine.invalidate(ckpt.root)  # a re-drain into the same dir replaced files
     if base is not None:
         check_chain_committed(ckpt)
+    fault_point("drain.pre_commit", step=m.step,
+                mode="delta" if base is not None else "full")
     ckpt.commit()
     return SaveResult(
         snapshot.step,
@@ -240,6 +245,7 @@ class HotDrainer:
                 f"{snapshot.step}: missing {missing[:3]}"
                 f"{'...' if len(missing) > 3 else ''}"
             )
+        fault_point("drain.enqueue", step=snapshot.step)
         engine = self.engine
         # Capture the fragment list NOW: a ring eviction between enqueue and
         # execution releases the snapshot, and persisting the then-empty
@@ -263,9 +269,13 @@ class HotDrainer:
         return True
 
     def check(self) -> None:
+        # Drain all accumulated failures at once (see AsyncSaver.check).
         if self._errors:
-            err = self._errors.pop(0)
-            raise RuntimeError("hot snapshot drain failed") from err
+            errs, self._errors = self._errors[:], []
+            suffix = f" ({len(errs)} failures)" if len(errs) > 1 else ""
+            err = RuntimeError(f"hot snapshot drain failed{suffix}")
+            err.failures = tuple(errs)
+            raise err from errs[0]
 
     def wait(self) -> list[SaveResult]:
         self._q.join()

@@ -39,6 +39,7 @@ from typing import Any, Iterable, Mapping
 
 import numpy as np
 
+from repro.chaos.points import fault_point
 from repro.core.dist_ckpt import (
     DistManifest,
     shard_digest_key,
@@ -245,6 +246,7 @@ class HotTier:
         geometry, same digests) so a drained hot snapshot is byte-identical
         to a direct ``write_distributed`` of the same state.
         """
+        fault_point("hot.capture", step=int(step))
         manifest = DistManifest(
             step=int(step),
             mesh=plan.mesh,

@@ -43,6 +43,7 @@ import threading
 
 import numpy as np
 
+from repro.chaos.points import fault_point
 from repro.core.dist_ckpt import shard_digest_key, writing_ranks_for
 from repro.core.patterns import StateKind
 from repro.core.tensor_io import IntegrityError, digest_matches
@@ -149,6 +150,8 @@ class PeerFragmentSource:
     def _fetch_verified(
         self, skey: str, digest: str, rank: int, name: str, kind: StateKind
     ) -> np.ndarray:
+        fault_point("peer.fetch", reader=self.reader_id, rank=rank, name=name,
+                    kind=kind.value)
         holders = self.registry.holders(skey)
         position = len(holders)  # this reader's fan-out tree node index
         ladder = [i for i in fanout_ladder(position) if i < len(holders)]

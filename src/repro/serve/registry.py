@@ -33,6 +33,7 @@ import threading
 
 import numpy as np
 
+from repro.chaos.points import fault_point
 from repro.core.dist_ckpt import DistCheckpoint, DistManifest
 
 __all__ = ["Publication", "PublicationRegistry", "Subscription"]
@@ -124,6 +125,7 @@ class PublicationRegistry:
         digests are what peer-fetch verification and delta diffs key on,
         so an undigested checkpoint cannot be distributed safely.
         """
+        fault_point("registry.publish.begin", step=int(ckpt.manifest.step))
         if not ckpt.is_committed:
             raise ValueError(f"refusing to publish uncommitted checkpoint {ckpt.root}")
         digests = dict(ckpt.manifest.shard_digests)
@@ -163,6 +165,11 @@ class PublicationRegistry:
                 self.store_evictions += 1
             self._poison = {(h, s) for h, s in self._poison if s in live}
             subs = list(self._subs)
+        # The crash-mid-publish window: the store GC already ran and
+        # ``_current`` is swapped, but no subscriber has been told yet.
+        # Readers on the previous publication must still be able to fetch
+        # every byte (peer misses fall back to the committed disk files).
+        fault_point("registry.publish.deliver", step=pub.step, seq=pub.seq)
         for sub in subs:
             sub._deliver(pub)
         return pub

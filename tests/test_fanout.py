@@ -408,6 +408,70 @@ def test_manager_publishes_on_commit(tmp_path):
     mgr.close()
 
 
+def test_crash_mid_publish_fleet_still_serves(tmp_path):
+    """A crash between the publish-time store GC and delivery leaves the
+    registry's cursor on the new step but no subscriber told.  Replicas on
+    the old publication keep serving it, a fresh replica rebuilds the new
+    step from disk (its peer-store entries were just GC'd), and the next
+    successful publish heals the fleet — while manager GC keeps the
+    currently-published step alive past keep_last throughout."""
+    from repro.ckpt.manager import CheckpointManager
+    from repro.chaos import ChaosController, FaultError, FaultSpec, Schedule
+    from repro.train.optimizer import TrainState
+    import jax.numpy as jnp
+
+    specs = _specs()
+    plan = ShardingPlan(mesh=MESH_2X2, param_specs=specs)
+    tgt_plan = ShardingPlan(mesh=MESH_1X1, param_specs=specs)
+    jmesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    def state_at(seed):
+        snap = _random_state(specs, seed=seed)
+        return snap, TrainState(
+            params={n: snap[n][StateKind.FP32] for n in specs},
+            exp_avg={n: snap[n][StateKind.EXP_AVG] for n in specs},
+            exp_avg_sq={n: snap[n][StateKind.EXP_AVG_SQ] for n in specs},
+            step=jnp.asarray(0, jnp.int32),
+        )
+
+    registry = PublicationRegistry()
+    mgr = CheckpointManager(tmp_path / "ck", plan, keep_last=1,
+                            save_interval=10, async_save=False, io_workers=1,
+                            registry=registry)
+    snap10, state10 = state_at(1)
+    mgr.save(state10, 10)
+    r1 = FleetReplica("r1", registry, tgt_plan, jmesh)
+    assert r1.sync()
+
+    snap20, state20 = state_at(2)
+    sched = Schedule(0, (FaultSpec("registry.publish.deliver", hit=1),))
+    with ChaosController(sched):
+        with pytest.raises(FaultError):
+            mgr.save(state20, 20)
+    # The torn publish: cursor swapped + store GC'd, nothing delivered.
+    assert registry.current().step == 20
+    assert not r1.sync()  # never announced to r1: it stays consistent on 10
+    for name, arr in r1.flat_params().items():
+        np.testing.assert_array_equal(np.asarray(arr), snap10[name][StateKind.FP32])
+    # A fresh replica rebuilds from the current publication: every shard
+    # fetchable (peer copies are stale-or-gone, disk fallback serves).
+    r2 = FleetReplica("r2", registry, tgt_plan, jmesh)
+    assert r2.sync()
+    for name, arr in r2.flat_params().items():
+        np.testing.assert_array_equal(np.asarray(arr), snap20[name][StateKind.FP32])
+    # Manager GC pins the published step: 20 outlives keep_last=1 even
+    # after the next commit, until its successor is actually announced.
+    snap30, state30 = state_at(3)
+    mgr.save(state30, 30)
+    assert registry.current().step == 30
+    assert r1.sync() and r2.sync()
+    for rep in (r1, r2):
+        for name, arr in rep.flat_params().items():
+            np.testing.assert_array_equal(
+                np.asarray(arr), snap30[name][StateKind.FP32])
+    mgr.close()
+
+
 # ---------------------------------------------------------------------------
 # Concurrent-reader stress: shared engine, shared caches, no races
 # ---------------------------------------------------------------------------
