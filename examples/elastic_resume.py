@@ -18,9 +18,18 @@ what the disk path would have produced.
 
 ::
 
-    PYTHONPATH=src python examples/elastic_resume.py
+    PYTHONPATH=src python examples/elastic_resume.py            # all phases
+    PYTHONPATH=src python examples/elastic_resume.py --phase 1 \
+        --trace /tmp/phase1-trace.json                          # obs smoke
+
+``--phase`` runs one phase standalone (1 trains to a checkpoint and
+needs nothing; 2 needs the phase-1 checkpoint, so standalone runs both
+launches; 3 is fully in-process).  ``--trace`` forwards to the train
+launcher, which exports its obs trace as Chrome trace-event JSON — this
+is what CI's obs-smoke stage validates.
 """
 
+import argparse
 import json
 import os
 import subprocess
@@ -30,7 +39,8 @@ import tempfile
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def launch(ndev: int, mesh: str, steps: int, ckpt: str) -> list[dict]:
+def launch(ndev: int, mesh: str, steps: int, ckpt: str,
+           trace: str = "") -> list[dict]:
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     env.pop("XLA_FLAGS", None)
     cmd = [
@@ -41,6 +51,8 @@ def launch(ndev: int, mesh: str, steps: int, ckpt: str) -> list[dict]:
         "--ckpt-dir", ckpt, "--save-interval", "5", "--sync-save",
         "--log-json",
     ]
+    if trace:
+        cmd += ["--trace", trace]
     out = subprocess.run(cmd, capture_output=True, text=True, env=env,
                          timeout=900)
     if out.returncode != 0:
@@ -107,12 +119,32 @@ def hot_tier_demo() -> None:
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--phase", choices=("1", "2", "3", "all"), default="all",
+                    help="run one phase standalone (default: all)")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="forward to the train launcher: export its obs "
+                    "trace as Chrome trace-event JSON at PATH (phases 1/2; "
+                    "phase 2 traces the resume launch)")
+    args = ap.parse_args()
+
+    if args.phase == "3":
+        print("phase 3: hot-tier recovery — the process survives, so the "
+              "surviving ranks' MEMORY is the checkpoint")
+        hot_tier_demo()
+        return
+
     with tempfile.TemporaryDirectory() as tmp:
         ckpt = f"{tmp}/job"
         print("phase 1: 8 chips, mesh data=4,model=2 — train to step 10")
-        for r in launch(8, "data=4,model=2", 10, ckpt):
+        phase1_trace = args.trace if args.phase in ("1", "all") else ""
+        for r in launch(8, "data=4,model=2", 10, ckpt, trace=phase1_trace):
             if r.get("event") == "step":
                 print(f"  step {r['step']:3d} loss {r['loss']:.4f}")
+        if args.phase == "1":
+            if args.trace:
+                print(f"  trace written to {args.trace}")
+            return
 
         print("\n*** simulated failure: 4 chips lost — planner proposes a "
               "4-chip mesh (data=2,model=2) ***\n")
@@ -125,7 +157,8 @@ def main() -> None:
         print(f"planner: {mesh_str}")
 
         print("\nphase 2: resume on 4 chips — UCP reconfigures the checkpoint")
-        for r in launch(4, mesh_str, 16, ckpt):
+        phase2_trace = args.trace if args.phase == "2" else ""
+        for r in launch(4, mesh_str, 16, ckpt, trace=phase2_trace):
             if r.get("event") == "restored":
                 print(f"  restored @ step {r['step']} mode={r['mode']} "
                       f"({r['reason']}) in {r['load_s']}s")
@@ -133,6 +166,8 @@ def main() -> None:
                 print(f"  step {r['step']:3d} loss {r['loss']:.4f}")
         print("\ntraining continued seamlessly on the shrunken cluster.")
 
+        if args.phase == "2":
+            return
         print("\nphase 3: hot-tier recovery — the process survives, so the "
               "surviving ranks' MEMORY is the checkpoint")
         hot_tier_demo()

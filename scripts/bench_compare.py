@@ -84,6 +84,17 @@ def main() -> int:
         help="overwrite BASELINE with NEW (deliberate regeneration after "
         "adding/renaming bench rows) instead of comparing",
     )
+    p.add_argument(
+        "--obs-rows", default="",
+        help="comma-separated row names held to --obs-tolerance instead of "
+        "--tolerance: the obs-disabled no-regression gate (a NEW run with "
+        "tracing off must match the pre-instrumentation baseline closely "
+        "on these rows, proving the disabled tracer is near-zero cost)",
+    )
+    p.add_argument(
+        "--obs-tolerance", type=float, default=1.02,
+        help="max slowdown factor for --obs-rows (default 1.02 = 2%%)",
+    )
     args = p.parse_args()
 
     if args.write_baseline:
@@ -97,6 +108,14 @@ def main() -> int:
     base = load_rows(args.baseline)
     failures: list[str] = []
 
+    obs_rows = {s for s in args.obs_rows.split(",") if s}
+    missing_obs = obs_rows - (set(new) & set(base))
+    if missing_obs:
+        failures.append(
+            f"--obs-rows not present in both files: {sorted(missing_obs)} "
+            "(an ungated obs row would pass vacuously)"
+        )
+
     common = sorted(set(new) & set(base))
     if not common:
         failures.append(
@@ -104,11 +123,13 @@ def main() -> int:
             f"and {args.baseline}"
         )
     for name in common:
+        tol = args.obs_tolerance if name in obs_rows else args.tolerance
         ratio = new[name] / base[name] if base[name] else float("inf")
-        status = "OK"
-        if ratio > args.tolerance:
-            status = f"REGRESSED >{args.tolerance}x"
-            failures.append(f"{name}: {ratio:.2f}x slower than baseline")
+        status = "OK" if name not in obs_rows else "OK (obs-gated)"
+        if ratio > tol:
+            status = f"REGRESSED >{tol}x"
+            failures.append(f"{name}: {ratio:.2f}x slower than baseline "
+                            f"(limit {tol}x)")
         print(f"{name}: {new[name]:.0f}us vs baseline {base[name]:.0f}us "
               f"({ratio:.2f}x) {status}")
 

@@ -71,16 +71,23 @@ def main() -> int:
     result = SweepResult(reports)
     print(f"{result.describe()}  [{time.time() - t0:.1f}s]")
 
-    if args.artifact is not None and result.failed:
-        args.artifact.write_text(json.dumps(failing_artifact(result), indent=1))
-        print(f"failing schedules written to {args.artifact}")
-
+    shrunk: dict[int, object] = {}
     if args.shrink:
         for rep in result.failed:
-            shrunk = shrink(rep, events=args.events)
-            print(f"\nseed {rep.seed} shrunk to {len(shrunk.schedule)} fault(s); "
+            small = shrink(rep, events=args.events)
+            shrunk[rep.seed] = small
+            print(f"\nseed {rep.seed} shrunk to {len(small.schedule)} fault(s); "
                   "regression test:\n")
-            print(emit_regression_test(shrunk, events=args.events))
+            print(emit_regression_test(small, events=args.events))
+
+    # Written after shrinking so each failure's artifact entry carries the
+    # minimal failing prefix and ITS obs timeline (the replay that the
+    # regression test pins), not the original long run's.
+    if args.artifact is not None and result.failed:
+        args.artifact.write_text(
+            json.dumps(failing_artifact(result, shrunk=shrunk), indent=1)
+        )
+        print(f"failing schedules written to {args.artifact}")
 
     return 0 if result.ok else 1
 

@@ -15,7 +15,13 @@
 # order-of-magnitude perf regression or a broken recording fails in CI
 # rather than on the next real benchmark run.
 #
-# Stage 4 — chaos smoke (opt-in, --chaos-smoke): three fixed seeds through
+# Stage 4 — obs smoke: run elastic-resume phase 1 with --trace and
+# validate the exported Chrome trace-event file (schema, event/containment
+# invariants, non-trivial span count) via repro.obs.validate_chrome_trace,
+# so a broken exporter or an instrumentation path that stops emitting
+# fails the PR lane, not the next person opening Perfetto.
+#
+# Stage 5 — chaos smoke (opt-in, --chaos-smoke): three fixed seeds through
 # the deterministic fault-injection harness (scripts/chaos_sweep.py), so a
 # regression in the recovery ladder fails the PR lane in seconds; the
 # nightly lane runs the full bounded sweep separately.
@@ -27,7 +33,11 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 stage="setup"
 smoke_json=""
-cleanup() { if [[ -n "$smoke_json" ]]; then rm -f "$smoke_json"; fi; }
+smoke_trace=""
+cleanup() {
+    if [[ -n "$smoke_json" ]]; then rm -f "$smoke_json"; fi
+    if [[ -n "$smoke_trace" ]]; then rm -f "$smoke_trace"; fi
+}
 on_err() { echo "ci.sh: FAILED during stage: $stage" >&2; }
 trap cleanup EXIT
 trap on_err ERR
@@ -107,6 +117,28 @@ PY
 
 stage="bench-compare"
 python scripts/bench_compare.py "$smoke_json" BENCH_checkpointing.json
+
+stage="obs-smoke"
+smoke_trace="$(mktemp /tmp/obs_smoke.XXXXXX.json)"
+python examples/elastic_resume.py --phase 1 --trace "$smoke_trace" >/dev/null
+python - "$smoke_trace" <<'PY'
+import json
+import sys
+
+from repro.obs import validate_chrome_trace
+
+doc = json.load(open(sys.argv[1]))
+assert doc.get("otherData", {}).get("schema") == "repro-trace/v1", doc.get("otherData")
+n = validate_chrome_trace(doc)
+# phase 1 does 10 train steps and 2 sync saves; a healthy trace has far
+# more than a handful of events — a near-empty one means instrumentation
+# silently stopped emitting.
+assert n >= 50, f"obs-smoke: only {n} trace events (instrumentation broken?)"
+names = {e["name"] for e in doc["traceEvents"] if e.get("ph") == "X"}
+for required in ("train.step", "ckpt.save", "save.fsync", "ckpt.commit"):
+    assert required in names, f"obs-smoke: no {required} spans in {sorted(names)}"
+print(f"obs-smoke: {n} trace events ok")
+PY
 
 if [[ "$chaos_smoke" == 1 ]]; then
     stage="chaos-smoke"

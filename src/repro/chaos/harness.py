@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.ckpt.manager import CheckpointManager
 from repro.ckpt.saver import snapshot_state
 from repro.core import DimSpec, MeshSpec, STATE_KINDS, StateKind, uniform_param_spec
@@ -113,6 +114,11 @@ class ChaosReport:
     violations: list[str]
     error: str | None
     log: list[str]
+    # Merged span+event records of the run (repro.obs timeline form) — what
+    # the sweep attaches to a failing seed's artifact so the exact sequence
+    # of lifecycle operations, fault-point hits and invariant checks that
+    # led to the failure can be read offline.
+    timeline: list[dict[str, Any]] = dataclasses.field(default_factory=list)
 
     def describe(self) -> str:
         head = (
@@ -463,6 +469,13 @@ class ChaosHarness:
         violations: list[Violation] = []
         error: str | None = None
         completed = 0
+        # Record the run's timeline: reuse an already-enabled tracer (the
+        # caller is tracing a bigger picture), else enable a private one so
+        # every ChaosReport carries its timeline unconditionally.
+        tracer = obs.active()
+        own_tracer = tracer is None
+        if own_tracer:
+            tracer = obs.enable()
         try:
             clock.reset()
             # Bootstrap fault-free: commit at least one step so "some tier
@@ -497,9 +510,12 @@ class ChaosHarness:
                         pub = self.registry.current()
                         if pub is not None and pub.checkpoint.is_committed:
                             self._storage_lost = False
-                    violations += check_invariants(
-                        self.mgr, registry=self.registry
+                    found = check_invariants(self.mgr, registry=self.registry)
+                    obs.event(
+                        "chaos.invariant_check", event=event,
+                        violations=len(found),
                     )
+                    violations += found
                     violations += self._verify_restore(event)
                     if violations:
                         break
@@ -516,6 +532,8 @@ class ChaosHarness:
                 except BaseException:
                     pass  # background errors already classified above
             self.replica_engine.close()
+            if own_tracer:
+                obs.disable(tracer)
         return ChaosReport(
             ok=error is None and not violations,
             seed=self.seed,
@@ -525,4 +543,5 @@ class ChaosHarness:
             violations=[str(v) for v in violations],
             error=error,
             log=self.log,
+            timeline=tracer.timeline(),
         )

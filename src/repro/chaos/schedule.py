@@ -43,6 +43,8 @@ import random
 import threading
 from typing import Any, Iterable, Mapping, Sequence
 
+import repro.obs as obs
+
 from .points import CATALOG, FaultError, activate, deactivate
 
 __all__ = [
@@ -232,6 +234,10 @@ class ChaosController:
 
     # ----------------------------------------------------------- point sink
     def on_point(self, name: str, ctx: Mapping[str, Any]) -> None:
+        # Every hit lands in the trace (no-op unless a tracer is enabled),
+        # so a failing seed's timeline shows the hit sequence that armed
+        # and fired each fault, interleaved with the lifecycle spans.
+        obs.event("chaos.point", point=name)
         fired: FaultSpec | None = None
         with self._lock:
             self.hits[name] = self.hits.get(name, 0) + 1
@@ -254,6 +260,10 @@ class ChaosController:
                         self._armed_at = self.hits.get(nxt.point, 0)
         if fired is None:
             return
+        obs.event(
+            "chaos.fault", point=name, action=fired.action,
+            args=list(fired.args), hit=fired.hit,
+        )
         # Execute OUTSIDE the lock: handlers touch manager/registry state and
         # other threads keep hitting fault points while a pause is parked.
         if fired.action == "crash":

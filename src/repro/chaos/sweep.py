@@ -117,21 +117,35 @@ def test_chaos_seed_{report.seed}_regression(tmp_path):
 '''
 
 
-def failing_artifact(result: SweepResult) -> dict:
-    """JSON-serializable record of a sweep's failures (the CI artifact)."""
+def failing_artifact(
+    result: SweepResult, *, shrunk: "dict[int, ChaosReport] | None" = None
+) -> dict:
+    """JSON-serializable record of a sweep's failures (the CI artifact).
+
+    Each failure carries the obs timeline of the *failing run* — the
+    time-ordered spans, fault-point hits and invariant checks the harness
+    recorded — so an offline reader sees exactly what the ladder did
+    before the violation, not just the schedule that provoked it.  When
+    ``shrunk`` maps a seed to its minimal-prefix replay, that replay's
+    schedule and timeline are attached instead (shorter, and the prefix
+    is what the emitted regression test pins)."""
+    failures = []
+    for r in result.failed:
+        best = (shrunk or {}).get(r.seed, r)
+        failures.append(
+            {
+                "seed": r.seed,
+                "config": best.config,
+                "schedule": best.schedule.to_json(),
+                "events_completed": best.events_completed,
+                "violations": best.violations,
+                "error": best.error,
+                "log": best.log[-20:],
+                "timeline": best.timeline[-400:],
+            }
+        )
     return {
         "failed_seeds": [r.seed for r in result.failed],
         "total_seeds": len(result.reports),
-        "failures": [
-            {
-                "seed": r.seed,
-                "config": r.config,
-                "schedule": r.schedule.to_json(),
-                "events_completed": r.events_completed,
-                "violations": r.violations,
-                "error": r.error,
-                "log": r.log[-20:],
-            }
-            for r in result.failed
-        ],
+        "failures": failures,
     }

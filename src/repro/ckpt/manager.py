@@ -35,12 +35,12 @@ from __future__ import annotations
 import dataclasses
 import shutil
 import threading
-import time
 from pathlib import Path
 from typing import Any, Mapping
 
 import jax
 
+import repro.obs as obs
 from repro.chaos.points import fault_point
 from repro.core.atoms import UcpCheckpoint
 from repro.core.convert import ConvertStats, convert_to_ucp
@@ -54,6 +54,22 @@ from .restore import RestoreStats, state_from_dist, state_from_stream, state_fro
 from .saver import AsyncSaver, SaveResult, snapshot_state, write_distributed
 
 __all__ = ["CheckpointManager", "RestoreInfo"]
+
+
+def _dir_bytes(root: Path) -> int:
+    """Recursive file-size sum of one step directory (GC accounting;
+    only walked while a tracer is enabled)."""
+    total = 0
+    try:
+        for p in root.rglob("*"):
+            try:
+                if p.is_file():
+                    total += p.stat().st_size
+            except OSError:
+                continue
+    except OSError:
+        pass
+    return total
 
 
 @dataclasses.dataclass
@@ -239,6 +255,13 @@ class CheckpointManager:
         block: bool = False,
     ) -> None:
         fault_point("manager.save.begin", step=step, block=block)
+        with obs.span("manager.save", step=step):
+            self._save(state, step, scalars=scalars, block=block)
+
+    def _save(
+        self, state: TrainState, step: int, *, scalars: Mapping[str, Any] | None,
+        block: bool,
+    ) -> None:
         # A re-save into an existing step replaces its manifest: the memoized
         # reference set is stale the moment the save starts.
         self._refs_cache.pop(step, None)
@@ -368,6 +391,10 @@ class CheckpointManager:
         when a newer save already committed — an older queued save may
         legitimately commit *after* a newer synchronous one.
         """
+        with obs.span("ckpt.gc"):
+            self._gc()
+
+    def _gc(self) -> None:
         fault_point("manager.gc.begin")
         # Read order matters: in-flight BEFORE committed.  A background save
         # commits and *then* leaves the pending set; reading pending first
@@ -434,8 +461,12 @@ class CheckpointManager:
                     set(), *self._pinned_chains.values()
                 )
                 if step_dir in pinned:
+                    obs.add("gc.pinned_steps")
                     continue
                 self._refs_cache.pop(s, None)
+                if obs.active() is not None:  # sizing walk only when traced
+                    obs.add("gc.collected_bytes", _dir_bytes(step_dir))
+                obs.add("gc.collected_steps")
                 shutil.rmtree(step_dir, ignore_errors=True)
                 shutil.rmtree(Path(str(step_dir) + ".ucp"), ignore_errors=True)
             self.engine.invalidate(step_dir)
@@ -451,6 +482,7 @@ class CheckpointManager:
                     and p.name < newest.name
                 ):
                     fault_point("manager.gc.wreckage", path=p.name)
+                    obs.add("gc.wreckage_removed")
                     shutil.rmtree(p, ignore_errors=True)
 
     # ---------------------------------------------------------------- restore
@@ -486,7 +518,16 @@ class CheckpointManager:
         if step is None:
             return None
         fault_point("manager.restore.begin", step=step)
-        t0 = time.perf_counter()
+        with obs.timed("ckpt.restore", step=step) as sw:
+            return self._restore_traced(
+                sw, plan, jmesh, step, convert_workers, verify, force_mode
+            )
+
+    def _restore_traced(
+        self, sw, plan, jmesh, step, convert_workers, verify, force_mode
+    ) -> tuple[TrainState, RestoreInfo]:
+        # Body of restore(), run inside its ``ckpt.restore`` span; ``sw``
+        # supplies wall time and carries the plan decision attributes.
         ckpt = DistCheckpoint.open(self.step_dir(step))
         if verify:
             problems = ckpt.validate()
@@ -496,7 +537,8 @@ class CheckpointManager:
                     + "; ".join(problems[:5])
                 )
         target = TargetSpec(plan.mesh, plan.param_specs)
-        rp = plan_resume(ckpt.manifest, target)
+        with obs.span("restore.plan"):
+            rp = plan_resume(ckpt.manifest, target)
         mode = rp.mode
         reason = rp.reason
         if force_mode is not None:
@@ -515,13 +557,15 @@ class CheckpointManager:
         cstats: ConvertStats | None = None
         state: TrainState | None = None
         if mode == ResumeMode.DIRECT:
-            state = state_from_dist(ckpt, plan, jmesh, stats, engine=self.engine)
+            with obs.span("restore.tier", tier="direct"):
+                state = state_from_dist(ckpt, plan, jmesh, stats, engine=self.engine)
         elif mode == ResumeMode.RESHARD_STREAM:
             transforms = rp.transforms or stream_transforms(ckpt.manifest, target)
             try:
-                state = state_from_stream(
-                    ckpt, plan, jmesh, transforms, stats, engine=self.engine
-                )
+                with obs.span("restore.tier", tier="reshard_stream"):
+                    state = state_from_stream(
+                        ckpt, plan, jmesh, transforms, stats, engine=self.engine
+                    )
             except (OSError, KeyError, IntegrityError) as e:
                 # Expected stream-time failures: a shard file lost/corrupt
                 # after planning, a manifest entry gone.  Programming errors
@@ -533,6 +577,11 @@ class CheckpointManager:
                 # (possibly damaged) source — for a delta, of its whole
                 # ancestor chain — and take the convert+Load path.
                 self.engine.invalidate_chain(ckpt)
+                obs.event(
+                    "restore.fallback", step=step,
+                    tier="reshard_stream", to="via_ucp",
+                    error=f"{type(e).__name__}: {e}",
+                )
                 mode = ResumeMode.VIA_UCP
                 reason = (
                     f"{reason}; stream failed ({type(e).__name__}: {e}), "
@@ -540,10 +589,13 @@ class CheckpointManager:
                 )
                 stats = RestoreStats()
         if mode == ResumeMode.VIA_UCP and state is None:
-            ucp, cstats = self._cached_ucp(
-                ckpt, step, convert_workers=convert_workers, verify=verify
-            )
-            state = state_from_ucp(ucp, plan, jmesh, stats, engine=self.engine)
+            with obs.span("restore.tier", tier="via_ucp"):
+                ucp, cstats = self._cached_ucp(
+                    ckpt, step, convert_workers=convert_workers, verify=verify
+                )
+                state = state_from_ucp(ucp, plan, jmesh, stats, engine=self.engine)
+        sw.set(mode=mode.value, reason=reason)
+        obs.add("restore.count")
         info = RestoreInfo(
             step=step,
             mode=mode,
@@ -551,7 +603,7 @@ class CheckpointManager:
             scalars=dict(ckpt.manifest.scalars),
             convert_stats=cstats,
             restore_stats=stats,
-            wall_time_s=time.perf_counter() - t0,
+            wall_time_s=sw.elapsed_s,
         )
         return state, info
 
@@ -630,23 +682,29 @@ class CheckpointManager:
             from repro.hot import plan_hot_recovery, state_from_hot
 
             target = TargetSpec(plan.mesh, plan.param_specs)
-            hp = plan_hot_recovery(self.hot, target, min_step=self.latest_step())
+            with obs.span("restore.plan"):
+                hp = plan_hot_recovery(self.hot, target, min_step=self.latest_step())
             if hp is not None:
-                t0 = time.perf_counter()
-                stats = RestoreStats()
-                state = state_from_hot(
-                    hp.snapshot, plan, jmesh, stats,
-                    engine=self.engine, verify=verify,
-                )
-                info = RestoreInfo(
-                    step=hp.step,
-                    mode=hp.mode,
-                    reason=hp.reason,
-                    scalars=dict(hp.snapshot.manifest.scalars),
-                    convert_stats=None,
-                    restore_stats=stats,
-                    wall_time_s=time.perf_counter() - t0,
-                )
+                with obs.timed(
+                    "ckpt.restore", step=hp.step,
+                    mode=hp.mode.value, reason=hp.reason,
+                ) as sw:
+                    stats = RestoreStats()
+                    with obs.span("restore.tier", tier=hp.mode.value):
+                        state = state_from_hot(
+                            hp.snapshot, plan, jmesh, stats,
+                            engine=self.engine, verify=verify,
+                        )
+                    obs.add("restore.count")
+                    info = RestoreInfo(
+                        step=hp.step,
+                        mode=hp.mode,
+                        reason=hp.reason,
+                        scalars=dict(hp.snapshot.manifest.scalars),
+                        convert_stats=None,
+                        restore_stats=stats,
+                        wall_time_s=sw.elapsed_s,
+                    )
                 return state, info
         return self.restore(
             jmesh, target_plan=target_plan,

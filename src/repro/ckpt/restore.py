@@ -38,6 +38,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding
 
+import repro.obs as obs
 from repro.core.atoms import UcpCheckpoint
 from repro.core.convert import assemble_atom
 from repro.core.engine import CheckpointEngine, default_engine
@@ -103,6 +104,8 @@ def read_region_from_source(
         # coverage is a plain sum.
         total = math.prod(shape)
         covered = sum(math.prod(hi - lo for lo, hi in ovs) for _, _, ovs in hits)
+        obs.add("restore.region_reads")
+        obs.add("restore.region_fragments", len(hits))
         out = engine.alloc(shape, resolve_dtype(dtype), zero=covered < total)
         for rank, e, ovs in hits:
             shard = engine.read_fragment(source, rank, name, kind)
@@ -188,33 +191,39 @@ def _build_trees(
                 if key not in seen:
                     seen.add(key)
                     jobs.append((name, spec.states[kind].dtype, canon))
-        results = engine.map(lambda j: reader(j[0], kind, j[2], j[1]), jobs)
+        with obs.span("restore.prefetch", field=field, regions=len(jobs)):
+            results = engine.map(lambda j: reader(j[0], kind, j[2], j[1]), jobs)
         table = {
             (n, tuple((r.start, r.stop) for r in canon)): arr
             for (n, _, canon), arr in zip(jobs, results)
         }
 
         flat: dict[str, jax.Array] = {}
-        for name, spec in param_items:
-            dtype = spec.states[kind].dtype
-            shape = tuple(spec.runtime_shape)
+        with obs.span("restore.materialize", field=field):
+            for name, spec in param_items:
+                dtype = spec.states[kind].dtype
+                shape = tuple(spec.runtime_shape)
 
-            def cb(index, _n=name, _k=kind, _d=dtype, _s=shape):
-                canon = _canon_region(index, _s)
-                arr = table.get((_n, tuple((r.start, r.stop) for r in canon)))
-                if arr is None:  # region jax didn't pre-announce: read now
-                    arr = reader(_n, _k, canon, _d)
+                def cb(index, _n=name, _k=kind, _d=dtype, _s=shape):
+                    canon = _canon_region(index, _s)
+                    arr = table.get((_n, tuple((r.start, r.stop) for r in canon)))
+                    if arr is None:  # region jax didn't pre-announce: read now
+                        arr = reader(_n, _k, canon, _d)
+                    if stats is not None:
+                        stats.bytes_read += arr.nbytes
+                    obs.add("restore.bytes_read", arr.nbytes)
+                    return arr
+
+                flat[name] = jax.make_array_from_callback(
+                    shape, shardings[name], cb
+                )
                 if stats is not None:
-                    stats.bytes_read += arr.nbytes
-                return arr
-
-            flat[name] = jax.make_array_from_callback(shape, shardings[name], cb)
-            if stats is not None:
-                stats.arrays += 1
-            # jax copied the callback arrays into its own buffers; the
-            # staging storage can back the next parameter's reads.
-            for key in [k for k in table if k[0] == name]:
-                engine.recycle(table.pop(key))
+                    stats.arrays += 1
+                obs.add("restore.arrays")
+                # jax copied the callback arrays into its own buffers; the
+                # staging storage can back the next parameter's reads.
+                for key in [k for k in table if k[0] == name]:
+                    engine.recycle(table.pop(key))
         trees[field] = flat
     return trees
 

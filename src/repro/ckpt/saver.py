@@ -20,13 +20,13 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-import time
 from pathlib import Path
 from typing import Any, Callable, Mapping
 
 import jax
 import numpy as np
 
+import repro.obs as obs
 from repro.chaos.points import fault_point
 from repro.core.dist_ckpt import (
     DistCheckpoint,
@@ -55,10 +55,11 @@ def snapshot_state(state: TrainState) -> dict[str, dict[StateKind, np.ndarray]]:
         StateKind.EXP_AVG_SQ: state.exp_avg_sq,
     }
     out: dict[str, dict[StateKind, np.ndarray]] = {}
-    for kind, tree in trees.items():
-        host = jax.device_get(tree)
-        for name, arr in flatten_with_paths(host).items():
-            out.setdefault(name, {})[kind] = np.asarray(arr)
+    with obs.span("save.stage"):
+        for kind, tree in trees.items():
+            host = jax.device_get(tree)
+            for name, arr in flatten_with_paths(host).items():
+                out.setdefault(name, {})[kind] = np.asarray(arr)
     return out
 
 
@@ -117,12 +118,25 @@ def write_distributed(
     Precedence: explicit ``workers`` > ``engine.workers`` > the process
     default pool width.
     """
-    t0 = time.perf_counter()
+    with obs.timed("ckpt.save", step=step) as sw:
+        return _write_distributed_traced(
+            sw, snap, plan, step, root, scalars, config_fingerprint,
+            save_mode, base, workers, engine,
+        )
+
+
+def _write_distributed_traced(
+    sw, snap, plan, step, root, scalars, config_fingerprint,
+    save_mode, base, workers, engine,
+) -> SaveResult:
+    # Body of write_distributed, run inside its ``ckpt.save`` span; ``sw``
+    # supplies wall time (SaveResult) and carries the result attributes.
     fallback_reason = ""
     if save_mode == "delta":
-        base, fallback_reason = resolve_delta_base(
-            base, root, plan.mesh, plan.param_specs, save_mode
-        )
+        with obs.span("save.resolve_base"):
+            base, fallback_reason = resolve_delta_base(
+                base, root, plan.mesh, plan.param_specs, save_mode
+            )
         if base is None:
             save_mode = "dedup"  # rebase: write a full snapshot
     else:
@@ -159,6 +173,10 @@ def write_distributed(
     def write_one(job) -> tuple[int, str, str, bool]:
         rank, name, kind, arr, layout = job
         fault_point("saver.shard", step=step, rank=rank, name=name, kind=kind.value)
+        with obs.span("save.shard", rank=rank, param=name, kind=kind.value) as sp:
+            return _write_one_traced(sp, rank, name, kind, arr, layout)
+
+    def _write_one_traced(sp, rank, name, kind, arr, layout):
         key = shard_digest_key(rank, name, kind)
         entries = layout.entries[rank]
         contiguous_view = None
@@ -183,11 +201,13 @@ def write_distributed(
             digest = content_digest(data)
             if base_digests.get(key) == digest:
                 engine.recycle(shard)
+                sp.set(inherited=True)
                 return 0, key, digest, True
             written = ckpt.write_shard(rank, name, kind, data, fsync=serial)
             engine.recycle(shard)
             if not serial:
-                fsync_path(ckpt.own_shard_path(rank, name, kind))
+                with obs.span("save.fsync"):
+                    fsync_path(ckpt.own_shard_path(rank, name, kind))
             return written, key, digest, False
         written = digest = None
         if not serial and contiguous_view is not None:
@@ -207,7 +227,8 @@ def write_distributed(
         if not serial:
             # Pipelined durability: flush this file now, overlapping the
             # fsync round-trip with the other workers' writes.
-            fsync_path(ckpt.own_shard_path(rank, name, kind))
+            with obs.span("save.fsync"):
+                fsync_path(ckpt.own_shard_path(rank, name, kind))
         return written, key, digest, False
 
     try:
@@ -224,7 +245,8 @@ def write_distributed(
                 manifest, base, [k for _, k, _, inh in results if inh]
             )
         fault_point("saver.pre_manifest", step=step, mode=save_mode)
-        ckpt.rewrite_manifest()
+        with obs.span("save.manifest"):
+            ckpt.rewrite_manifest()
         # A re-save into an existing directory must not leave readers on
         # stale handles of the replaced files (os.replace keeps old inodes
         # alive under cached mmaps/arrays).  Invalidate every engine that
@@ -240,16 +262,28 @@ def write_distributed(
         check_chain_committed(ckpt)
     fault_point("saver.pre_commit", step=step, mode=save_mode)
     ckpt.commit()
-    return SaveResult(
+    result = SaveResult(
         step,
         Path(root),
         written,
-        time.perf_counter() - t0,
+        sw.elapsed_s,
         mode="delta" if base is not None else "full",
         shards_written=len(results) - n_inherited,
         shards_inherited=n_inherited,
         fallback_reason=fallback_reason,
     )
+    # Fold the stats into the metric spine: the obs counters and the
+    # returned SaveResult must agree exactly (asserted in tests/test_obs).
+    sw.set(mode=result.mode, bytes=result.bytes_written,
+           shards_written=result.shards_written,
+           shards_inherited=result.shards_inherited)
+    obs.add(f"save.{result.mode}")
+    obs.add("save.bytes_written", result.bytes_written)
+    obs.add("save.shards_written", result.shards_written)
+    obs.add("save.shards_inherited", result.shards_inherited)
+    if fallback_reason:
+        obs.event("save.rebase", step=step, reason=fallback_reason)
+    return result
 
 
 class AsyncSaver:
@@ -318,10 +352,14 @@ class AsyncSaver:
         root_path = Path(root)
         with self._pending_lock:
             self._pending_roots.add(root_path)
+        # Explicit span handoff across the queue: the writer thread's spans
+        # hang off whatever span submitted the save (e.g. train.step).
+        parent = obs.current()
 
         def job() -> SaveResult:
             try:
-                return write_distributed(snap, plan, step, root, **kw)
+                with obs.attach(parent), obs.span("save.async_job", step=step):
+                    return write_distributed(snap, plan, step, root, **kw)
             finally:
                 # Only now may GC treat the directory as wreckage (on
                 # success it carries COMMIT; on failure it really is

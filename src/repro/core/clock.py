@@ -10,8 +10,12 @@ testable behaviors, not flakes.  Discovery and GC order checkpoints by
 what ``created_at``/COMMIT record but can never change which step GC or
 resume considers "newest"; the invariant checker relies on that.
 
-Perf-path reads (``time.perf_counter`` benchmarking) are deliberately NOT
-routed through here: they measure the harness itself and must stay real.
+Perf-path reads are deliberately NOT routed through here: they measure
+the harness itself and must stay real.  Those sites go through
+:mod:`repro.obs` instead — ``obs.timed()`` at per-save/per-restore
+granularity (always measuring, on ``time.perf_counter_ns``) and
+``obs.span()`` below it — so duration accounting lives on one monotonic
+timebase that chaos clock skew can never touch.
 """
 
 from __future__ import annotations

@@ -40,6 +40,7 @@ from typing import Any, Iterator, Mapping
 
 import numpy as np
 
+import repro.obs as obs
 from repro.chaos.points import fault_point
 
 from . import clock
@@ -358,14 +359,15 @@ class DistCheckpoint:
         A checkpoint directory without COMMIT is treated as garbage by
         discovery (crash-during-save safety).
         """
-        fault_point("dist.pre_commit", step=self.manifest.step, root=str(self.root))
-        tmp = self.root / "COMMIT.tmp"
-        with open(tmp, "w") as f:
-            f.write(json.dumps({"step": self.manifest.step, "t": clock.now()}))
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, self.commit_path)
-        fault_point("dist.committed", step=self.manifest.step, root=str(self.root))
+        with obs.span("ckpt.commit", step=self.manifest.step):
+            fault_point("dist.pre_commit", step=self.manifest.step, root=str(self.root))
+            tmp = self.root / "COMMIT.tmp"
+            with open(tmp, "w") as f:
+                f.write(json.dumps({"step": self.manifest.step, "t": clock.now()}))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, self.commit_path)
+            fault_point("dist.committed", step=self.manifest.step, root=str(self.root))
 
     # ------------------------------------------------------------------- read
     @classmethod

@@ -56,6 +56,7 @@ from typing import Any, Callable, Iterable, Protocol, Sequence, runtime_checkabl
 
 import numpy as np
 
+import repro.obs as obs
 from .tensor_io import resolve_dtype
 
 __all__ = [
@@ -212,8 +213,10 @@ class BufferArena:
                 self._retained -= raw.nbytes
                 self._pooled_ids.discard(id(raw))
                 self.reuses += 1
+                obs.add("engine.arena.reuse")
             else:
                 self.allocs += 1
+                obs.add("engine.arena.alloc")
         if raw is None:
             raw = np.empty(bucket, np.uint8).view(_ArenaBuffer)
         # plain-ndarray view (consumers like np.save / jax shouldn't see the
@@ -274,11 +277,23 @@ class HandleCache:
     taken from the handle dies, so evicted handles stay safe to use.
     """
 
-    def __init__(self, capacity: int = 128, max_bytes: int = 1 << 30):
+    def __init__(
+        self,
+        capacity: int = 128,
+        max_bytes: int = 1 << 30,
+        metric: str = "engine.handle",
+    ):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self.max_bytes = int(max_bytes)
+        # obs counter prefix — the engine's two caches (file handles,
+        # consolidated atoms) report hit/miss/eviction under distinct names.
+        # Precomputed so the disabled-tracer hot path allocates nothing.
+        self.metric = metric
+        self._m_hit = metric + ".hit"
+        self._m_miss = metric + ".miss"
+        self._m_evict = metric + ".eviction"
         self._lock = threading.Lock()
         self._entries: OrderedDict[str, Any] = OrderedDict()
         self._bytes = 0
@@ -301,9 +316,12 @@ class HandleCache:
             if key in self._entries:
                 self.hits += 1
                 self._entries.move_to_end(key)
+                obs.add(self._m_hit)
                 return self._entries[key]
             self.misses += 1
+        obs.add(self._m_miss)
         value = loader()  # outside the lock: loads may fault pages / IO
+        evicted = 0
         with self._lock:
             if key not in self._entries:
                 self._entries[key] = value
@@ -315,6 +333,9 @@ class HandleCache:
                 _, old = self._entries.popitem(last=False)
                 self._bytes -= self._weight(old)
                 self.evictions += 1
+                evicted += 1
+        if evicted:
+            obs.add(self._m_evict, evicted)
         return value
 
     def invalidate(self, path: str | os.PathLike | None = None) -> None:
@@ -479,7 +500,7 @@ class CheckpointEngine:
         # In-memory consolidated atoms (the stream-restore fallback for
         # params whose transform needs consolidation) — byte-bounded LRU so
         # a restore's peak memory for fallback atoms is capped.
-        self.atoms = HandleCache(256, atom_cache_bytes)
+        self.atoms = HandleCache(256, atom_cache_bytes, metric="engine.atom")
         self.arena = BufferArena(arena_max_bytes)
         self._indexes: dict[tuple[str, str, str], FragmentIndex] = {}
         self._index_lock = threading.Lock()
@@ -520,6 +541,17 @@ class CheckpointEngine:
         items = list(items)
         if self.workers == 1 or len(items) <= 1:
             return [fn(x) for x in items]
+        parent = obs.current()
+        if parent is not None:
+            # Explicit span handoff into the pool: worker-side spans nest
+            # under the submitting span (which stays open — map() blocks on
+            # the results), instead of floating as per-thread roots.
+            inner = fn
+
+            def fn(x):
+                with obs.attach(parent):
+                    return inner(x)
+
         return list(self._get_pool().map(fn, items))
 
     def close(self) -> None:
@@ -547,8 +579,11 @@ class CheckpointEngine:
         key = (source_cache_key(source), name, getattr(kind, "value", str(kind)))
         idx = self._indexes.get(key)
         if idx is not None:
+            obs.add("engine.index.hit")
             return idx
-        idx = FragmentIndex(source, name, kind)
+        with obs.span("engine.index_build", param=name):
+            obs.add("engine.index.build")
+            idx = FragmentIndex(source, name, kind)
         with self._index_lock:
             return self._indexes.setdefault(key, idx)
 
@@ -595,6 +630,13 @@ class CheckpointEngine:
         loader runs outside the cache lock by design).
         """
         key = f"{source_cache_key(source)}::atom::{name}@{getattr(kind, 'value', kind)}"
+        if obs.active() is not None:
+            inner = builder
+
+            def builder():
+                with obs.span("restore.consolidate", param=name):
+                    return inner()
+
         return self._single_flight(key, builder)
 
     def shared_region(

@@ -21,10 +21,10 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from pathlib import Path
 from typing import Callable
 
+import repro.obs as obs
 from repro.chaos.points import fault_point
 from repro.core.dist_ckpt import (
     DistCheckpoint,
@@ -73,7 +73,23 @@ def persist_snapshot(
     digest changed are written, the rest become manifest references.  An
     incompatible/missing base degrades to a full promotion (rebase).
     """
-    t0 = time.perf_counter()
+    with obs.timed("hot.drain", step=snapshot.step) as sw:
+        return _persist_snapshot_traced(
+            sw, snapshot, root, engine=engine, fragments=fragments,
+            base=base, save_mode=save_mode,
+        )
+
+
+def _persist_snapshot_traced(
+    sw,
+    snapshot: HotSnapshot,
+    root,
+    *,
+    engine: CheckpointEngine | None = None,
+    fragments: list | None = None,
+    base: "DistCheckpoint | Callable[[], DistCheckpoint | None] | None" = None,
+    save_mode: str | None = None,
+) -> SaveResult:
     if fragments is None:
         # Direct call: check completeness now.  (The drainer checks at
         # enqueue time instead — after a ring eviction released the
@@ -138,12 +154,14 @@ def persist_snapshot(
 
     def write_one(job) -> int:
         name, kind, rank, data = job
-        fault_point("drain.shard", step=m.step, rank=rank, name=name,
-                    kind=kind.value)
-        written = ckpt.write_shard(rank, name, kind, data, fsync=serial)
-        if not serial:
-            fsync_path(ckpt.own_shard_path(rank, name, kind))
-        return written
+        with obs.span("drain.shard", rank=rank, param=name, kind=kind.value):
+            fault_point("drain.shard", step=m.step, rank=rank, name=name,
+                        kind=kind.value)
+            written = ckpt.write_shard(rank, name, kind, data, fsync=serial)
+            if not serial:
+                with obs.span("save.fsync"):
+                    fsync_path(ckpt.own_shard_path(rank, name, kind))
+            return written
 
     written = sum(engine.map(write_one, jobs))
     engine.invalidate(ckpt.root)  # a re-drain into the same dir replaced files
@@ -152,16 +170,26 @@ def persist_snapshot(
     fault_point("drain.pre_commit", step=m.step,
                 mode="delta" if base is not None else "full")
     ckpt.commit()
-    return SaveResult(
+    result = SaveResult(
         snapshot.step,
         Path(str(root)),
         written,
-        time.perf_counter() - t0,
+        sw.elapsed_s,
         mode="delta" if base is not None else "full",
         shards_written=len(jobs),
         shards_inherited=len(fragments) - len(jobs),
         fallback_reason=fallback_reason,
     )
+    sw.set(mode=result.mode, bytes=written,
+           shards_written=result.shards_written,
+           shards_inherited=result.shards_inherited)
+    obs.add(f"save.{result.mode}")
+    obs.add("save.bytes_written", written)
+    obs.add("save.shards_written", result.shards_written)
+    obs.add("save.shards_inherited", result.shards_inherited)
+    if fallback_reason:
+        obs.event("save.rebase", step=m.step, reason=fallback_reason)
+    return result
 
 
 class HotDrainer:
@@ -254,13 +282,17 @@ class HotDrainer:
         root_path = Path(str(root))
         with self._pending_lock:
             self._pending_roots.add(root_path)
+        parent = obs.current()  # handoff token: the drain runs on a worker
 
         def job() -> SaveResult:
             try:
-                return persist_snapshot(
-                    snapshot, root, engine=engine, fragments=fragments,
-                    base=base, save_mode=save_mode,
-                )
+                with obs.attach(parent), obs.span(
+                    "hot.drain_job", step=snapshot.step
+                ):
+                    return persist_snapshot(
+                        snapshot, root, engine=engine, fragments=fragments,
+                        base=base, save_mode=save_mode,
+                    )
             finally:
                 with self._pending_lock:
                     self._pending_roots.discard(root_path)

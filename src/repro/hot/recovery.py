@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import repro.obs as obs
 from repro.core.plan import (
     ResumeMode,
     TargetSpec,
@@ -92,6 +93,9 @@ def plan_hot_recovery(
             return None  # ring is step-ordered: everything older loses too
         missing = snap.missing_fragments()
         if missing:
+            obs.event(
+                "restore.hot_skip", step=snap.step, missing=len(missing)
+            )
             continue  # an older snapshot may still have full coverage
         if layouts_equal(snap.manifest, target):
             return HotRecoveryPlan(
@@ -113,6 +117,9 @@ def plan_hot_recovery(
             )
         # structurally unservable (shape/param-set change): every snapshot
         # in the ring shares the training run's manifest → disk it is.
+        obs.event(
+            "restore.hot_unservable", step=snap.step, reason=why_not
+        )
         return None
     return None
 

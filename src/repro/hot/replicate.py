@@ -107,7 +107,12 @@ class ReplicationPolicy:
 
 @dataclasses.dataclass
 class ReplicaStats:
-    """Accounting of one capture's replica placement."""
+    """Accounting of one capture's replica placement.
+
+    ``HotTier.capture`` folds these fields into the obs counters
+    (``hot.fragments`` / ``hot.stored_bytes`` / ``hot.resident_bytes`` /
+    ``hot.mirrored_bytes``) so the dataclass and the metric registry can
+    never disagree — one accumulation site feeds both."""
 
     fragments: int = 0          # distinct fragments stored
     natural_fragments: int = 0  # redundancy met by the sharding plan alone

@@ -39,6 +39,7 @@ from typing import Any, Iterable, Mapping
 
 import numpy as np
 
+import repro.obs as obs
 from repro.chaos.points import fault_point
 from repro.core.dist_ckpt import (
     DistManifest,
@@ -247,6 +248,28 @@ class HotTier:
         to a direct ``write_distributed`` of the same state.
         """
         fault_point("hot.capture", step=int(step))
+        with obs.span("hot.capture", step=int(step)) as sp:
+            hs, stats = self._capture(
+                snap, plan, step,
+                scalars=scalars, config_fingerprint=config_fingerprint,
+            )
+            sp.set(fragments=stats.fragments, resident_bytes=stats.resident_bytes)
+        obs.add("hot.captures")
+        obs.add("hot.fragments", stats.fragments)
+        obs.add("hot.stored_bytes", stats.stored_bytes)
+        obs.add("hot.resident_bytes", stats.resident_bytes)
+        obs.add("hot.mirrored_bytes", stats.mirrored_bytes)
+        return hs, stats
+
+    def _capture(
+        self,
+        snap: Mapping[str, Mapping[StateKind, np.ndarray]],
+        plan,
+        step: int,
+        *,
+        scalars: Mapping[str, Any] | None = None,
+        config_fingerprint: Mapping[str, Any] | None = None,
+    ) -> tuple[HotSnapshot, ReplicaStats]:
         manifest = DistManifest(
             step=int(step),
             mesh=plan.mesh,
@@ -321,6 +344,7 @@ class HotTier:
             old = self._ring.popleft()
             old.release(self.engine)
             self.evictions += 1
+            obs.add("hot.evictions")
 
     # ----------------------------------------------------------------- lookup
     def snapshots(self) -> list[HotSnapshot]:

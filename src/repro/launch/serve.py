@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 import os
 import sys
-import time
 
 
 def main(argv=None) -> int:
@@ -40,6 +39,7 @@ def main(argv=None) -> int:
     import jax
     import jax.numpy as jnp
 
+    import repro.obs as obs
     from repro.configs import ParallelismConfig, get_config, reduced
     from repro.core.layout import MeshSpec
     from repro.dist.sharding import make_plan, make_sharder, vocab_multiple
@@ -95,19 +95,19 @@ def main(argv=None) -> int:
             key, (b, cfg.encoder.source_len, cfg.d_model), jnp.bfloat16)
 
     with jmesh:
-        t0 = time.perf_counter()
-        logits, cache = D.prefill(lm, params, cache, toks, **extra)
-        prefill_s = time.perf_counter() - t0
+        with obs.timed("serve.prefill", batch=b, prompt_len=args.prompt_len) as sw:
+            logits, cache = D.prefill(lm, params, cache, toks, **extra)
+        prefill_s = sw.elapsed_s
         step = jax.jit(lambda pp, cc, tt: D.decode_step(lm, pp, cc, tt))
         cur = jnp.argmax(logits, -1)[:, None]
         outs = [cur]
-        t0 = time.perf_counter()
-        for _ in range(args.gen - 1):
-            lg, cache = step(params, cache, cur)
-            cur = jnp.argmax(lg[:, -1], -1)[:, None]
-            outs.append(cur)
-        jax.block_until_ready(cur)
-        gen_s = time.perf_counter() - t0
+        with obs.timed("serve.decode", batch=b, steps=args.gen - 1) as sw:
+            for _ in range(args.gen - 1):
+                lg, cache = step(params, cache, cur)
+                cur = jnp.argmax(lg[:, -1], -1)[:, None]
+                outs.append(cur)
+            jax.block_until_ready(cur)
+        gen_s = sw.elapsed_s
     seq = jnp.concatenate(outs, 1)
     print(f"prefill {args.prompt_len} toks × {b} reqs: {prefill_s*1e3:.0f} ms")
     print(f"decode  {args.gen - 1} steps × {b} reqs: {gen_s*1e3:.0f} ms "

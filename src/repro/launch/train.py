@@ -68,6 +68,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--total-steps", type=int, default=200)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--log-json", action="store_true")
+    p.add_argument("--trace", default=None, metavar="PATH",
+                   help="record an obs trace of the run and export it as a "
+                   "Chrome trace-event JSON (Perfetto-loadable) at PATH")
     return p
 
 
@@ -79,6 +82,19 @@ def main(argv=None) -> int:
             f"--xla_force_host_platform_device_count={args.host_devices} " + flags
         )
 
+    # obs is jax-free, safe to import before XLA_FLAGS matters
+    import repro.obs as obs
+
+    tracer = obs.enable() if args.trace else None
+    try:
+        return _run(args)
+    finally:
+        if tracer is not None:
+            obs.write_chrome_trace(args.trace, tracer)
+            obs.disable(tracer)
+
+
+def _run(args) -> int:
     # jax-dependent imports only after XLA_FLAGS is final
     from repro.configs import ParallelismConfig, TrainConfig, get_config, reduced
     from repro.launch.mesh import make_mesh_from_string

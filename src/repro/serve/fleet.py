@@ -34,6 +34,7 @@ import json
 
 import jax
 
+import repro.obs as obs
 from repro.ckpt.restore import RestoreStats, build_param_arrays
 from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.plan import TargetSpec, layouts_equal, stream_transforms
@@ -96,6 +97,12 @@ class FleetReplica:
         pubs = self.subscription.poll()
         if not pubs:
             return False
+        with obs.span("serve.sync", replica=self.name) as sp:
+            self._sync(pubs, sp)
+        obs.add("serve.syncs")
+        return True
+
+    def _sync(self, pubs: list[Publication], sp) -> None:
         pub = pubs[-1]
         contiguous = (
             self._flat is not None
@@ -113,6 +120,7 @@ class FleetReplica:
             else stream_transforms(pub.manifest, target)
         )
         if not contiguous:
+            sp.set(mode="full", step=pub.step, params=len(pub.manifest.params))
             self._flat = dict(self._build_shared(source, transforms, None))
             self.last_update = frozenset(self._flat)
         else:
@@ -125,12 +133,12 @@ class FleetReplica:
                 for p in pubs
                 for name in _changed_fp32_params(p)
             )
+            sp.set(mode="delta", step=pub.step, params=len(changed))
             if changed:
                 self._flat.update(self._build_shared(source, transforms, changed))
             self.last_update = changed
         self.seq = pub.seq
         self.step = pub.step
-        return True
 
     def _build_shared(
         self,

@@ -43,6 +43,7 @@ import threading
 
 import numpy as np
 
+import repro.obs as obs
 from repro.chaos.points import fault_point
 from repro.core.dist_ckpt import shard_digest_key, writing_ranks_for
 from repro.core.patterns import StateKind
@@ -56,7 +57,12 @@ __all__ = ["FanoutStats", "PeerFragmentSource"]
 
 @dataclasses.dataclass
 class FanoutStats:
-    """Thread-safe accounting of one fleet's (or one reader's) fetches."""
+    """Thread-safe accounting of one fleet's (or one reader's) fetches.
+
+    Every ``_add`` mirrors into the obs counter registry under
+    ``serve.<field>`` (precomputed names — the mirror costs one global
+    read + branch when tracing is disabled), so a trace of a fleet sync
+    carries the same fetch-ladder tallies the dataclass reports."""
 
     disk_fetches: int = 0
     disk_bytes_read: int = 0
@@ -72,6 +78,13 @@ class FanoutStats:
     def _add(self, field: str, n: int = 1) -> None:
         with self._lock:
             setattr(self, field, getattr(self, field) + n)
+        obs.add(_OBS_COUNTERS[field], n)
+
+
+# field -> obs counter name, precomputed so the disabled path never formats.
+_OBS_COUNTERS = {
+    f.name: f"serve.{f.name}" for f in dataclasses.fields(FanoutStats)
+}
 
 
 class PeerFragmentSource:
@@ -150,42 +163,53 @@ class PeerFragmentSource:
     def _fetch_verified(
         self, skey: str, digest: str, rank: int, name: str, kind: StateKind
     ) -> np.ndarray:
-        fault_point("peer.fetch", reader=self.reader_id, rank=rank, name=name,
-                    kind=kind.value)
-        holders = self.registry.holders(skey)
-        position = len(holders)  # this reader's fan-out tree node index
-        ladder = [i for i in fanout_ladder(position) if i < len(holders)]
-        order = [holders[i] for i in ladder]
-        order += [h for h in holders if h not in order and h != self.reader_id]
-        tried = 0
-        for holder in order:
-            data = self.registry.fetch(skey, holder)
-            if data is None:
-                continue  # holder evicted between listing and fetch
-            tried += 1
-            if digest_matches(data, digest):
-                self.stats._add("peer_fetches")
-                self.stats._add("peer_bytes_read", int(data.nbytes))
-                if tried > 1:
-                    self.stats._add("refetches")
-                return data
-            # Corrupt peer copy: evict the holder, fall to the next tier —
-            # detected, counted, never silently served.
-            self.stats._add("digest_failures")
-            self.registry.drop_holder(skey, holder)
-        # Root tier: the published checkpoint on disk.  Read fresh (no
-        # shared handle cache) so the disk-bytes census reflects reality.
-        data = self._ckpt.read_shard(rank, name, kind, mmap=False)
-        self.stats._add("disk_fetches")
-        self.stats._add("disk_bytes_read", int(data.nbytes))
-        if tried:
-            self.stats._add("refetches")
-        if not digest_matches(data, digest):
-            raise IntegrityError(
-                f"{skey}: disk copy at {self._ckpt.shard_path(rank, name, kind)} "
-                f"does not match the published digest (last fetch tier)"
-            )
-        return data
+        with obs.span(
+            "serve.fetch", reader=self.reader_id, param=name, rank=rank,
+            kind=kind.value,
+        ) as sp:
+            fault_point("peer.fetch", reader=self.reader_id, rank=rank,
+                        name=name, kind=kind.value)
+            holders = self.registry.holders(skey)
+            position = len(holders)  # this reader's fan-out tree node index
+            ladder = [i for i in fanout_ladder(position) if i < len(holders)]
+            order = [holders[i] for i in ladder]
+            order += [
+                h for h in holders if h not in order and h != self.reader_id
+            ]
+            tried = 0
+            for holder in order:
+                data = self.registry.fetch(skey, holder)
+                if data is None:
+                    continue  # holder evicted between listing and fetch
+                tried += 1
+                if digest_matches(data, digest):
+                    self.stats._add("peer_fetches")
+                    self.stats._add("peer_bytes_read", int(data.nbytes))
+                    if tried > 1:
+                        self.stats._add("refetches")
+                    sp.set(tier="peer", retries=tried - 1)
+                    return data
+                # Corrupt peer copy: evict the holder, fall to the next
+                # tier — detected, counted, never silently served.
+                self.stats._add("digest_failures")
+                obs.event("serve.digest_mismatch", holder=holder, param=name,
+                          rank=rank, kind=kind.value)
+                self.registry.drop_holder(skey, holder)
+            # Root tier: the published checkpoint on disk.  Read fresh (no
+            # shared handle cache) so the disk-bytes census reflects reality.
+            data = self._ckpt.read_shard(rank, name, kind, mmap=False)
+            self.stats._add("disk_fetches")
+            self.stats._add("disk_bytes_read", int(data.nbytes))
+            if tried:
+                self.stats._add("refetches")
+            sp.set(tier="disk", retries=tried)
+            if not digest_matches(data, digest):
+                raise IntegrityError(
+                    f"{skey}: disk copy at "
+                    f"{self._ckpt.shard_path(rank, name, kind)} "
+                    f"does not match the published digest (last fetch tier)"
+                )
+            return data
 
     # ------------------------------------------------------------- helpers
     @property

@@ -33,6 +33,7 @@ import threading
 
 import numpy as np
 
+import repro.obs as obs
 from repro.chaos.points import fault_point
 from repro.core.dist_ckpt import DistCheckpoint, DistManifest
 
@@ -125,6 +126,14 @@ class PublicationRegistry:
         digests are what peer-fetch verification and delta diffs key on,
         so an undigested checkpoint cannot be distributed safely.
         """
+        with obs.span("serve.publish", step=int(ckpt.manifest.step)) as sp:
+            pub = self._publish(ckpt)
+            sp.set(seq=pub.seq, kind=pub.kind, changed=len(pub.changed))
+        obs.add("serve.publications")
+        obs.add("serve.changed_shards", len(pub.changed))
+        return pub
+
+    def _publish(self, ckpt: DistCheckpoint) -> Publication:
         fault_point("registry.publish.begin", step=int(ckpt.manifest.step))
         if not ckpt.is_committed:
             raise ValueError(f"refusing to publish uncommitted checkpoint {ckpt.root}")

@@ -11,12 +11,13 @@ step with the same global data order (reshard-invariant pipeline).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+import repro.obs as obs
 
 from repro.configs.base import (
     ModelConfig,
@@ -196,14 +197,14 @@ class Trainer:
         history: list[dict[str, Any]] = []
         with self.jmesh:
             for step in range(start_step, start_step + num_steps):
-                t0 = time.perf_counter()
-                state, metrics = self.step_fn(state, self.batch(step))
+                with obs.timed("train.step", step=step + 1) as sw:
+                    state, metrics = self.step_fn(state, self.batch(step))
                 rec = {
                     "step": step + 1,
                     "loss": float(metrics["loss"]),
                     "grad_norm": float(metrics["grad_norm"]),
                     "lr": float(metrics["lr"]),
-                    "dt": time.perf_counter() - t0,
+                    "dt": sw.elapsed_s,
                 }
                 history.append(rec)
                 if log:
