@@ -84,12 +84,14 @@ def main() -> None:
         "transform_load": B.bench_transform_load,     # paper Fig. 12
         "hot_tier": B.bench_hot_tier,                 # beyond-paper hot tier
         "delta": B.bench_delta,                       # beyond-paper delta saves
+        "codec": B.bench_codec,                       # beyond-paper shard codec
         "fanout": F.bench_fanout,                     # beyond-paper serving fan-out
         "conversion_scaling": B.bench_conversion_scaling,  # §3.2 Table 2
         "correctness": B.bench_correctness,           # Fig. 6/7, Table 3
+        "codec_equiv": B.bench_codec_equiv,           # nightly loss-curve gate
     }
     # accept sizes=...
-    sized = {"save_cost", "transform_load", "hot_tier", "delta", "fanout"}
+    sized = {"save_cost", "transform_load", "hot_tier", "delta", "codec", "fanout"}
     sizes = tuple(s for s in args.sizes.split(",") if s)
     only = {s for s in args.only.split(",") if s}
     print("name,us_per_call,derived")

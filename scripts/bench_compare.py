@@ -66,6 +66,7 @@ ORDERING_PAIRS = [
         ("reshard_stream", "via_ucp_total"),
         ("reshard_stream_mixed", "via_ucp_total"),
         ("delta_save", "delta_full_save"),
+        ("codec_delta_save", "codec_full_save"),
         ("fanout_readers_32", "fanout_independent_32"),
     )
 ]

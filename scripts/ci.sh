@@ -96,8 +96,8 @@ python -m pytest -x -q "${PYTEST_ARGS[@]}" "$@"
 
 stage="bench-smoke"
 smoke_json="$(mktemp /tmp/bench_smoke.XXXXXX.json)"
-python -m benchmarks.run --only save_cost,hot_tier,delta,fanout --sizes small \
-    --json "$smoke_json" >/dev/null
+python -m benchmarks.run --only save_cost,hot_tier,delta,codec,fanout \
+    --sizes small --json "$smoke_json" >/dev/null
 python - "$smoke_json" <<'PY'
 import json
 import sys
@@ -111,6 +111,9 @@ assert any(n.startswith("save_parallel_") for n in names), names
 assert any(n.startswith("hot_capture_") for n in names), names
 assert any(n.startswith("delta_save_") for n in names), names
 assert any(n.startswith("chain_restore_") for n in names), names
+assert any(n.startswith("codec_full_save_") for n in names), names
+assert any(n.startswith("codec_delta_save_") for n in names), names
+assert any(n.startswith("codec_restore_") for n in names), names
 assert any(n.startswith("fanout_readers_") for n in names), names
 print(f"bench-smoke: {len(rows)} rows ok")
 PY

@@ -50,6 +50,7 @@ from repro.core.plan import ResumeMode, TargetSpec, plan_resume, stream_transfor
 from repro.core.tensor_io import IntegrityError
 from repro.dist.sharding import ShardingPlan
 from repro.train.optimizer import TrainState
+from .policy import CheckpointPolicy, policy_from_legacy_kwargs
 from .restore import RestoreStats, state_from_dist, state_from_stream, state_from_ucp
 from .saver import AsyncSaver, SaveResult, snapshot_state, write_distributed
 
@@ -89,26 +90,24 @@ class CheckpointManager:
         root: str | Path,
         plan: ShardingPlan,
         *,
-        keep_last: int = 3,
-        save_interval: int = 50,
-        disk_interval: int | None = None,
-        hot_interval: int | None = None,
-        hot_replication: int = 1,
-        hot_max_snapshots: int = 4,
-        hot_max_bytes: int = 2 << 30,
-        async_save: bool = True,
-        max_pending_saves: int = 2,
-        io_workers: int | None = None,
-        save_mode: str = "dedup",
-        full_interval: int = 8,
+        policy: CheckpointPolicy | None = None,
         config_fingerprint: Mapping[str, Any] | None = None,
-        registry=None,
+        **legacy,
     ):
-        """``io_workers``: width of the checkpoint I/O pool shared by the
-        save, convert and restore paths (None = process default;
-        1 = fully serial).  ``max_pending_saves`` bounds how many async
-        save snapshots may be in flight before ``save()`` applies
-        backpressure.
+        """All checkpointing knobs live on one validated
+        :class:`~repro.ckpt.policy.CheckpointPolicy` — cadence, retention,
+        hot tiering, delta policy, the shard codec and the fan-out
+        registry; see its docstring for the field-by-field reference.
+        ``config_fingerprint`` stays a separate argument: it is this
+        *run's* identity (model/parallelism fingerprints recorded into
+        every manifest), not checkpointing policy.
+
+        Legacy spelling: the individual keyword arguments the manager took
+        before ``CheckpointPolicy`` existed (``keep_last=...``,
+        ``save_mode=...``, ``hot_interval=...``, …) still work — they are
+        mapped onto a policy with a ``DeprecationWarning``.  Mixing
+        ``policy=`` with legacy knobs is an error (two sources of truth),
+        as is any keyword that never was a knob.
 
         Hot-tier policy: ``hot_interval`` (None = disabled) captures a
         peer-replicated in-memory snapshot every N steps; every
@@ -127,6 +126,11 @@ class CheckpointManager:
         removes a step that a live delta references.  ``"dedup"`` /
         ``"all"`` keep their previous meaning (every save full).
 
+        Codec policy: ``codec`` opts shards into block-quantized payloads
+        (per StateKind — see :class:`~repro.core.codec.CodecPolicy`); both
+        the direct save path and the hot drainer's promotions encode under
+        the same policy, and every restore tier decodes transparently.
+
         Fan-out: ``registry`` (a
         :class:`~repro.serve.registry.PublicationRegistry`) subscribes a
         serving fleet to this run — every newly committed step is
@@ -135,21 +139,27 @@ class CheckpointManager:
         observed).  The newest committed step is always within
         ``keep_last``, so a publication's disk fallback tier outlives GC.
         """
-        if save_mode not in ("dedup", "all", "delta"):
-            raise ValueError(
-                f"save_mode must be 'dedup', 'all' or 'delta', got {save_mode!r}"
+        if legacy:
+            if policy is not None:
+                raise TypeError(
+                    "pass either policy=CheckpointPolicy(...) or individual "
+                    f"legacy knobs, not both (got {sorted(legacy)})"
+                )
+            policy = policy_from_legacy_kwargs(
+                legacy, where="CheckpointManager"
             )
-        if full_interval < 1:
-            raise ValueError(f"full_interval must be >= 1, got {full_interval}")
+        self.policy = policy if policy is not None else CheckpointPolicy()
+        policy = self.policy
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.plan = plan
-        self.keep_last = keep_last
-        self.save_interval = save_interval
-        self.disk_interval = disk_interval if disk_interval is not None else save_interval
-        self.hot_interval = hot_interval
-        self.save_mode = save_mode
-        self.full_interval = full_interval
+        self.keep_last = policy.keep_last
+        self.save_interval = policy.save_interval
+        self.disk_interval = policy.effective_disk_interval
+        self.hot_interval = policy.hot_interval
+        self.save_mode = policy.save_mode
+        self.full_interval = policy.full_interval
+        self.codec = policy.codec
         self._disk_save_seq = 0  # disk-save counter driving the rebase cadence
         # Chain pins: save root -> the base chain directories an in-flight
         # delta resolved (registered by the base loader on the writer
@@ -161,36 +171,38 @@ class CheckpointManager:
         # Committed manifests are immutable: memoize referenced_steps per
         # step so gc() doesn't re-parse keep_last manifests on every save.
         self._refs_cache: dict[int, set[int]] = {}
-        self.registry = registry
+        self.registry = policy.registry
         self._published_step: int | None = None
         self.config_fingerprint = dict(config_fingerprint or {})
         self.engine = (
-            CheckpointEngine(workers=io_workers)
-            if io_workers is not None
+            CheckpointEngine(workers=policy.io_workers)
+            if policy.io_workers is not None
             else default_engine()
         )
-        self._async = AsyncSaver(max_pending=max_pending_saves) if async_save else None
+        self._async = (
+            AsyncSaver(max_pending=policy.max_pending_saves)
+            if policy.async_save
+            else None
+        )
         self.hot = None
         self._drainer = None
-        if hot_interval is not None:
-            if hot_interval < 1:
-                raise ValueError(f"hot_interval must be >= 1, got {hot_interval}")
+        if policy.hot_interval is not None:
             from repro.hot import HotDrainer, HotTier
 
             self.hot = HotTier(
-                replication=hot_replication,
-                max_snapshots=hot_max_snapshots,
-                max_bytes=hot_max_bytes,
+                replication=policy.hot_replication,
+                max_snapshots=policy.hot_max_snapshots,
+                max_bytes=policy.hot_max_bytes,
                 engine=self.engine,
                 # "all" must capture the full per-replica write set or the
                 # promoted disk checkpoints would silently be dedup'd;
                 # "delta" captures the dedup set (deltas require it).
-                save_mode="all" if save_mode == "all" else "dedup",
+                save_mode="all" if policy.save_mode == "all" else "dedup",
             )
             self._drainer = HotDrainer(
-                every=max(1, self.disk_interval // hot_interval),
+                every=max(1, self.disk_interval // policy.hot_interval),
                 engine=self.engine,
-                max_pending=max_pending_saves,
+                max_pending=policy.max_pending_saves,
             )
 
     # ------------------------------------------------------------------ save
@@ -273,7 +285,9 @@ class CheckpointManager:
                 config_fingerprint=self.config_fingerprint,
             )
             drain_kw = self._next_save_kw(step) if self._drainer.next_drains else {}
-            self._drainer.maybe_drain(hs, self.step_dir(step), **drain_kw)
+            self._drainer.maybe_drain(
+                hs, self.step_dir(step), codec=self.codec, **drain_kw
+            )
             if block:
                 self._drainer.wait()
             self.gc()
@@ -283,6 +297,7 @@ class CheckpointManager:
             scalars=dict(scalars or {}),
             config_fingerprint=self.config_fingerprint,
             engine=self.engine,
+            codec=self.codec,
         )
         kw.update(self._next_save_kw(step))
         if self._async is not None and not block:

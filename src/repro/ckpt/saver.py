@@ -36,6 +36,7 @@ from repro.core.dist_ckpt import (
     resolve_delta_base,
     shard_digest_key,
 )
+from repro.core.codec import CodecPolicy, encode_shard
 from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.layout import slice_shard
 from repro.core.patterns import StateKind
@@ -89,6 +90,7 @@ def write_distributed(
     base: "DistCheckpoint | Callable[[], DistCheckpoint | None] | None" = None,
     workers: int | None = None,
     engine: CheckpointEngine | None = None,
+    codec: CodecPolicy | None = None,
 ) -> SaveResult:
     """Write one distributed checkpoint (all ranks' shards) and commit.
 
@@ -115,19 +117,27 @@ def write_distributed(
     base degrades to a full save (a rebase), recorded in
     ``SaveResult.fallback_reason`` — never an error on the save hot path.
 
+    ``codec`` (a :class:`~repro.core.codec.CodecPolicy`) opts shards into
+    block-quantized payloads per StateKind.  Coded shards are encoded
+    before they hit the staging arena, the manifest records a
+    self-describing tag per shard, and the delta diff keys on *pre-encode*
+    digests (``DistManifest.pre_encode_digests``) so codec choice never
+    defeats the diff.  ``None`` / an all-raw policy is the exact legacy
+    byte path.
+
     Precedence: explicit ``workers`` > ``engine.workers`` > the process
     default pool width.
     """
     with obs.timed("ckpt.save", step=step) as sw:
         return _write_distributed_traced(
             sw, snap, plan, step, root, scalars, config_fingerprint,
-            save_mode, base, workers, engine,
+            save_mode, base, workers, engine, codec,
         )
 
 
 def _write_distributed_traced(
     sw, snap, plan, step, root, scalars, config_fingerprint,
-    save_mode, base, workers, engine,
+    save_mode, base, workers, engine, codec,
 ) -> SaveResult:
     # Body of write_distributed, run inside its ``ckpt.save`` span; ``sw``
     # supplies wall time (SaveResult) and carries the result attributes.
@@ -141,7 +151,13 @@ def _write_distributed_traced(
             save_mode = "dedup"  # rebase: write a full snapshot
     else:
         base = None  # base is only meaningful for delta saves
-    base_digests = base.manifest.shard_digests if base is not None else None
+    if codec is not None and codec.is_raw:
+        codec = None  # all-raw policy == no policy: keep the legacy byte path
+    # The delta diff always runs against the base's *pre-encode* table:
+    # for an all-raw base this IS shard_digests, and for a coded base it
+    # compares raw new content against raw old content — codec choice
+    # never defeats the diff.
+    base_digests = base.manifest.pre_encode_digests() if base is not None else None
     manifest = DistManifest(
         step=step,
         mesh=plan.mesh,
@@ -160,23 +176,29 @@ def _write_distributed_traced(
         engine = default_engine()
     serial = engine.workers == 1
 
-    jobs: list[tuple[int, str, StateKind, np.ndarray, Any]] = []
+    jobs: list[tuple[int, str, StateKind, np.ndarray, Any, str]] = []
     for name, spec in plan.param_specs.items():
         arrs = snap[name]
         for kind, arr in arrs.items():
             dt = resolve_dtype(spec.states[kind].dtype)
             arr = arr.astype(dt, copy=False)
             layout = spec.layout_for(kind, plan.mesh)
+            tag = codec.tag_for(kind) if codec is not None else "raw"
             for rank in ckpt.writing_ranks(name, kind):
-                jobs.append((rank, name, kind, arr, layout))
+                jobs.append((rank, name, kind, arr, layout, tag))
 
-    def write_one(job) -> tuple[int, str, str, bool]:
-        rank, name, kind, arr, layout = job
+    # Workers return (written, key, served_digest, pre_digest, tag,
+    # inherited).  For raw shards served == pre; inherited shards return
+    # Nones and the aggregation copies the base manifest's entries (the
+    # ancestor's file may be coded even when this save's policy differs —
+    # mixed-codec chains are the normal case after a policy change).
+    def write_one(job) -> tuple[int, str, str | None, str | None, str | None, bool]:
+        rank, name, kind, arr, layout, tag = job
         fault_point("saver.shard", step=step, rank=rank, name=name, kind=kind.value)
         with obs.span("save.shard", rank=rank, param=name, kind=kind.value) as sp:
-            return _write_one_traced(sp, rank, name, kind, arr, layout)
+            return _write_one_traced(sp, rank, name, kind, arr, layout, tag)
 
-    def _write_one_traced(sp, rank, name, kind, arr, layout):
+    def _write_one_traced(sp, rank, name, kind, arr, layout, tag):
         key = shard_digest_key(rank, name, kind)
         entries = layout.entries[rank]
         contiguous_view = None
@@ -188,6 +210,36 @@ def _write_distributed_traced(
             view = arr[entries[0].atom_index()]
             if view.flags.c_contiguous:
                 contiguous_view = view
+        if tag != "raw":
+            # Coded shard: pre-encode digest first (the delta-diff key),
+            # then encode + write the payload container.  The served digest
+            # is the decoded content's — what every reader will get.
+            if contiguous_view is not None:
+                shard, data = None, contiguous_view
+            else:
+                shard = slice_shard(arr, layout, rank, alloc=engine.alloc)
+                data = shard
+            pre = content_digest(data)
+            if base_digests is not None and base_digests.get(key) == pre:
+                engine.recycle(shard)
+                sp.set(inherited=True)
+                return 0, key, None, None, None, True
+            enc = encode_shard(data, tag)
+            if enc.tag == "raw":
+                # int8ef exactness fallback: the raw array IS the payload.
+                written = ckpt.write_shard(rank, name, kind, data, fsync=serial)
+                served = pre
+            else:
+                written = ckpt.write_shard(
+                    rank, name, kind, enc.payload, fsync=serial
+                )
+                served = content_digest(enc.decoded)
+            engine.recycle(shard)
+            if not serial:
+                with obs.span("save.fsync"):
+                    fsync_path(ckpt.own_shard_path(rank, name, kind))
+            sp.set(codec=enc.tag)
+            return written, key, served, pre, enc.tag, False
         if base_digests is not None:
             # Delta diff: digest first (zero-copy for contiguous shards),
             # write only when the content changed since the base.  The
@@ -202,13 +254,13 @@ def _write_distributed_traced(
             if base_digests.get(key) == digest:
                 engine.recycle(shard)
                 sp.set(inherited=True)
-                return 0, key, digest, True
+                return 0, key, None, None, None, True
             written = ckpt.write_shard(rank, name, kind, data, fsync=serial)
             engine.recycle(shard)
             if not serial:
                 with obs.span("save.fsync"):
                     fsync_path(ckpt.own_shard_path(rank, name, kind))
-            return written, key, digest, False
+            return written, key, digest, digest, "raw", False
         written = digest = None
         if not serial and contiguous_view is not None:
             # Zero-copy fast path: the shard is one padding-free,
@@ -229,20 +281,37 @@ def _write_distributed_traced(
             # fsync round-trip with the other workers' writes.
             with obs.span("save.fsync"):
                 fsync_path(ckpt.own_shard_path(rank, name, kind))
-        return written, key, digest, False
+        return written, key, digest, digest, "raw", False
 
     try:
         results = engine.map(write_one, jobs)
-        written = sum(w for w, _, _, _ in results)
+        written = sum(w for w, *_ in results)
         # Content digests land in the manifest before COMMIT, so a committed
         # checkpoint always carries verifiable integrity metadata.  The
-        # table covers every shard — written AND inherited — so the next
-        # delta diffs against this manifest alone.
-        manifest.shard_digests = {k: d for _, k, d, _ in results}
-        n_inherited = sum(1 for _, _, _, inh in results if inh)
+        # tables cover every shard — written AND inherited — so the next
+        # delta diffs against this manifest alone.  Inherited entries copy
+        # the base's served digest / pre digest / codec tag: the bytes (and
+        # their encoding) are the ancestor's, whatever this save's policy.
+        served_tbl: dict[str, str] = {}
+        pre_tbl: dict[str, str] = {}
+        codec_tbl: dict[str, str] = {}
+        for _w, key, served, pre, tag, inh in results:
+            if inh:
+                served = base.manifest.shard_digests[key]
+                pre = base_digests[key]
+                tag = base.manifest.codec_tag(key)
+            served_tbl[key] = served
+            if pre != served:
+                pre_tbl[key] = pre
+            if tag != "raw":
+                codec_tbl[key] = tag
+        manifest.shard_digests = served_tbl
+        manifest.shard_pre_digests = pre_tbl
+        manifest.shard_codecs = codec_tbl
+        n_inherited = sum(1 for *_, inh in results if inh)
         if base is not None:
             flatten_provenance(
-                manifest, base, [k for _, k, _, inh in results if inh]
+                manifest, base, [r[1] for r in results if r[5]]
             )
         fault_point("saver.pre_manifest", step=step, mode=save_mode)
         with obs.span("save.manifest"):

@@ -28,7 +28,7 @@ from typing import Any, Mapping
 
 import numpy as np
 
-from . import clock
+from . import clock, codec
 from .patterns import StateKind, STATE_KINDS
 from .tensor_io import load_tensor, open_memmap, save_tensor
 
@@ -44,6 +44,13 @@ class AtomInfo:
     ``digests`` maps state kind → content digest (``sha256:...``; older manifests ``crc32:...``) of the
     atom tensor, recorded by ``convert_to_ucp`` and checked by
     :meth:`UcpCheckpoint.validate`.  Empty for pre-digest checkpoints.
+
+    ``codecs`` maps state kind → self-describing codec tag
+    (``repro.core.codec``; absent == ``raw``).  Atom files are currently
+    always written raw — conversion decodes coded *shards* through the
+    ordinary read path and consolidates plain tensors — so today the table
+    is only populated by external writers; it exists so the format is
+    self-describing and a later PR can code atoms without a version bump.
     """
 
     name: str
@@ -52,9 +59,10 @@ class AtomInfo:
     stacked_dim: int | None = None
     kind: str = "dense"
     digests: dict[StateKind, str] = dataclasses.field(default_factory=dict)
+    codecs: dict[StateKind, str] = dataclasses.field(default_factory=dict)
 
     def to_json(self) -> dict:
-        return {
+        out = {
             "name": self.name,
             "logical_shape": list(self.logical_shape),
             "dtypes": {k.value: v for k, v in self.dtypes.items()},
@@ -62,6 +70,9 @@ class AtomInfo:
             "kind": self.kind,
             "digests": {k.value: v for k, v in self.digests.items()},
         }
+        if self.codecs:  # sparse: all-raw manifests round-trip unchanged
+            out["codecs"] = {k.value: v for k, v in self.codecs.items()}
+        return out
 
     @classmethod
     def from_json(cls, d: Mapping) -> "AtomInfo":
@@ -72,6 +83,7 @@ class AtomInfo:
             stacked_dim=d.get("stacked_dim"),
             kind=str(d.get("kind", "dense")),
             digests={StateKind(k): str(v) for k, v in d.get("digests", {}).items()},
+            codecs={StateKind(k): str(v) for k, v in d.get("codecs", {}).items()},
         )
 
 
@@ -179,7 +191,11 @@ class UcpCheckpoint:
         regions per parameter then opens each atom file once, not R times."""
         info = self.manifest.atoms[name]
         path = self.atom_path(name, kind)
-        loader = lambda: load_tensor(path, dtype=info.dtypes[kind], mmap=mmap)
+        tag = info.codecs.get(kind, "raw")
+        if tag == "raw":
+            loader = lambda: load_tensor(path, dtype=info.dtypes[kind], mmap=mmap)
+        else:  # self-describing codec tag: decode at the read point
+            loader = lambda: codec.decode_file(path, tag, dtype=info.dtypes[kind])
         if cache is not None:
             return cache.get(path, loader)
         return loader()

@@ -1,0 +1,321 @@
+"""Shard codec: block-quantized checkpoint payloads (opt-in, per StateKind).
+
+The codec sits *below* every consumer of shard bytes.  Encode happens once,
+on the save path (saver workers / hot drain), before bytes reach the host
+staging arena; decode lives in exactly one place —
+:meth:`repro.core.dist_ckpt.DistCheckpoint.read_shard` — so DIRECT restore,
+the streaming reshard planner, UCP conversion, validation, the hot drain's
+promoted steps and the peer fan-out all serve coded shards unchanged.
+
+**Codec tags** (self-describing, mirroring the ``<algo>:<hex>`` digest
+convention; recorded per shard in ``DistManifest.shard_codecs``):
+
+================== =========================================================
+``raw``            plain ``.npy`` shard (the default; absent from the table)
+``int8:b<N>``      lossy block int8, block size N, per-block fp32 scales
+``int8ef:b<N>``    int8 + persisted fp32 error-feedback residual — decodes
+                   **bit-exact** (the encoder verifies the round-trip digest
+                   and falls back to ``raw`` if exactness cannot be proven)
+``fp8:e4m3:b<N>``  lossy per-block-scaled float8_e4m3fn
+``fp8:e5m2:b<N>``  lossy per-block-scaled float8_e5m2
+================== =========================================================
+
+**Digest semantics** (DESIGN.md §10): ``shard_digests`` always records the
+*served* (decoded) content — everything that treats a digest as "what a
+reader will get" (validate, peer fetch verification, publications) keeps
+working unchanged.  For lossy tags the *pre-encode* digest of the raw
+update additionally lands in ``shard_pre_digests``, and the delta diff
+compares new raw content against the merged pre-encode table — so codec
+choice never defeats the diff, and a lossless re-save of unchanged bytes
+still inherits.
+
+**Payload container** (``RQS1``): one uint8 array written through the
+ordinary ``save_tensor`` path (atomic tmp+rename, batched fsync, same
+``.npy`` file extension)::
+
+    b"RQS1" | uint32le header_len | header JSON | q bytes | scales | [residual]
+
+The header records the codec tag, logical dtype, shape, **explicit element
+count** (the zero-padding contract is never implicit), and block size.
+
+Quantization math is the shared block-quant core
+(:mod:`repro.kernels.block_quant`) — the same implementation the
+compressed-gradient collectives use, so wire and shard formats cannot
+drift.  Encode runs the jitted reference (the Pallas kernels are the
+on-device path, property-tested bit-identical); decode is pure numpy so
+the read path stays importable without jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+
+import numpy as np
+
+import repro.obs as obs
+
+from .patterns import StateKind
+from .tensor_io import IntegrityError, resolve_dtype, dtype_name
+
+__all__ = [
+    "CODEC_RAW",
+    "CodecPolicy",
+    "CodecSpec",
+    "EncodedShard",
+    "decode_file",
+    "decode_payload",
+    "encode_shard",
+    "parse_codec",
+]
+
+CODEC_RAW = "raw"
+
+_MAGIC = b"RQS1"
+
+# tag family -> quantized storage dtype name
+_QDTYPES = {
+    "int8": "int8",
+    "int8ef": "int8",
+    "fp8:e4m3": "float8_e4m3fn",
+    "fp8:e5m2": "float8_e5m2",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecSpec:
+    """Parsed form of one codec tag."""
+
+    family: str  # "raw" | "int8" | "int8ef" | "fp8:e4m3" | "fp8:e5m2"
+    block: int = 256
+
+    @property
+    def tag(self) -> str:
+        if self.family == CODEC_RAW:
+            return CODEC_RAW
+        return f"{self.family}:b{self.block}"
+
+    @property
+    def lossless(self) -> bool:
+        """Whether decode is bit-exact (``int8ef`` is lossless *by
+        construction*: the encoder proves it per shard or falls back)."""
+        return self.family in (CODEC_RAW, "int8ef")
+
+    @property
+    def qdtype(self) -> np.dtype:
+        return resolve_dtype(_QDTYPES[self.family])
+
+
+def parse_codec(tag: str) -> CodecSpec:
+    """Parse a self-describing codec tag; raises ``ValueError`` on junk."""
+    if tag == CODEC_RAW:
+        return CodecSpec(CODEC_RAW)
+    for family in _QDTYPES:
+        prefix = f"{family}:b"
+        if tag.startswith(prefix):
+            try:
+                block = int(tag[len(prefix):])
+            except ValueError:
+                break
+            if block <= 0:
+                break
+            return CodecSpec(family, block)
+    raise ValueError(
+        f"unrecognized codec tag {tag!r} (expected 'raw', 'int8:b<N>', "
+        f"'int8ef:b<N>', 'fp8:e4m3:b<N>' or 'fp8:e5m2:b<N>')"
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecPolicy:
+    """Per-StateKind precision policy (DESIGN.md §6/§10).
+
+    Params default to ``raw`` (restores must be bit-identical through every
+    recovery tier); optimizer moments are the lossy-tolerant state.  Lossy
+    *params* require the explicit ``allow_lossy_params`` opt-in — the guard
+    against silently breaking the bit-identity guarantee.
+    """
+
+    params: str = CODEC_RAW
+    exp_avg: str = CODEC_RAW
+    exp_avg_sq: str = CODEC_RAW
+    allow_lossy_params: bool = False
+
+    def __post_init__(self):
+        for field in ("params", "exp_avg", "exp_avg_sq"):
+            parse_codec(getattr(self, field))  # raises on junk
+        if not parse_codec(self.params).lossless and not self.allow_lossy_params:
+            raise ValueError(
+                f"codec {self.params!r} for params is lossy; params must "
+                "restore bit-identical (use 'raw' or 'int8ef:b<N>', or opt "
+                "in explicitly with allow_lossy_params=True)"
+            )
+
+    @classmethod
+    def moments(cls, tag: str = "int8:b256") -> "CodecPolicy":
+        """The default lossy-tolerant policy: raw params, coded moments."""
+        return cls(exp_avg=tag, exp_avg_sq=tag)
+
+    def tag_for(self, kind: StateKind) -> str:
+        if kind == StateKind.FP32:
+            return self.params
+        return getattr(self, kind.value)
+
+    @property
+    def is_raw(self) -> bool:
+        return (
+            self.params == CODEC_RAW
+            and self.exp_avg == CODEC_RAW
+            and self.exp_avg_sq == CODEC_RAW
+        )
+
+
+# --------------------------------------------------------------------- encode
+@dataclasses.dataclass
+class EncodedShard:
+    """Result of encoding one shard.
+
+    ``tag`` is what was *actually* written (``int8ef`` falls back to
+    ``raw`` when bit-exactness cannot be proven for this shard's values);
+    ``payload`` is the uint8 container (``None`` for raw — the caller
+    writes the array itself); ``decoded`` is exactly what a reader of the
+    written bytes will see (its digest is the served content digest)."""
+
+    tag: str
+    payload: np.ndarray | None
+    decoded: np.ndarray
+
+
+def _quantize(flat32: np.ndarray, spec: CodecSpec) -> tuple[np.ndarray, np.ndarray]:
+    """Quantize through the shared jitted core (lazy jax import: decode and
+    the rest of ``repro.core`` stay importable without it)."""
+    from repro.kernels.block_quant import block_quantize
+
+    q, scales = block_quantize(
+        flat32, block=spec.block, dtype=np.dtype(spec.qdtype).name
+    )
+    return np.asarray(q), np.asarray(scales)
+
+
+def _dequantize_np(
+    q: np.ndarray, scales: np.ndarray, count: int
+) -> np.ndarray:
+    """Pure-numpy mirror of the core's ``dequantize_blocks`` (pinned
+    bit-identical by tests/test_codec.py)."""
+    flat = (q.astype(np.float32) * scales[:, None].astype(np.float32)).reshape(-1)
+    return flat[:count]
+
+
+def encode_shard(arr: np.ndarray, tag: str) -> EncodedShard:
+    """Encode one raw shard under ``tag``.
+
+    Lossy families return the quantized payload plus the decoded view a
+    reader will serve.  ``int8ef`` additionally persists an fp32 residual
+    computed in float64 (``q·scale`` is exact there), verifies the decode
+    reproduces the input bit-for-bit, and falls back to ``raw`` when it
+    does not — lossless by construction, never by assumption.
+    """
+    spec = parse_codec(tag)
+    if spec.family == CODEC_RAW:
+        return EncodedShard(CODEC_RAW, None, arr)
+    arr = np.asarray(arr)
+    count = arr.size
+    q, scales = _quantize(arr, spec)
+    sections: list[tuple[str, np.ndarray]] = [("q", q), ("scales", scales)]
+    if spec.family == "int8ef":
+        x64 = arr.astype(np.float64).reshape(-1)
+        d64 = (q.astype(np.float64) * scales.astype(np.float64)[:, None]
+               ).reshape(-1)[:count]
+        residual = (x64 - d64).astype(np.float32)
+        decoded = (d64 + residual.astype(np.float64)).astype(arr.dtype)
+        decoded = decoded.reshape(arr.shape)
+        if decoded.tobytes() != np.ascontiguousarray(arr).tobytes():
+            # exactness not provable for these values: refuse to pretend
+            obs.event("codec.ef_fallback", nbytes=int(arr.nbytes))
+            return EncodedShard(CODEC_RAW, None, arr)
+        sections.append(("residual", residual))
+    else:
+        decoded = _dequantize_np(q, scales, count).astype(arr.dtype)
+        decoded = decoded.reshape(arr.shape)
+    header = {
+        "codec": spec.tag,
+        "dtype": dtype_name(arr.dtype),
+        "shape": list(arr.shape),
+        "count": int(count),
+        "block": int(spec.block),
+        "sections": [[name, int(a.nbytes)] for name, a in sections],
+    }
+    hbytes = json.dumps(header).encode()
+    payload = np.concatenate(
+        [
+            np.frombuffer(_MAGIC + struct.pack("<I", len(hbytes)) + hbytes,
+                          dtype=np.uint8),
+        ]
+        + [np.ascontiguousarray(a).view(np.uint8).reshape(-1) for _, a in sections]
+    )
+    obs.add("codec.encode_shards")
+    obs.add("codec.encode_bytes_raw", int(arr.nbytes))
+    obs.add("codec.encode_bytes_coded", int(payload.nbytes))
+    return EncodedShard(spec.tag, payload, decoded)
+
+
+# --------------------------------------------------------------------- decode
+def decode_payload(
+    buf: np.ndarray, *, expect_tag: str | None = None,
+    expect_dtype: str | None = None,
+) -> np.ndarray:
+    """Decode one ``RQS1`` payload (pure numpy) → the served array.
+
+    ``expect_tag`` / ``expect_dtype`` cross-check the payload's own header
+    against what the manifest recorded; any mismatch is an
+    :class:`IntegrityError` — a coded shard must never be silently
+    misinterpreted."""
+    raw = np.asarray(buf, dtype=np.uint8).reshape(-1)
+    if raw[:4].tobytes() != _MAGIC:
+        raise IntegrityError(
+            f"coded shard payload lacks the {_MAGIC!r} magic "
+            "(manifest says coded, file says raw?)"
+        )
+    (hlen,) = struct.unpack("<I", raw[4:8].tobytes())
+    header = json.loads(raw[8 : 8 + hlen].tobytes().decode())
+    tag = header["codec"]
+    if expect_tag is not None and tag != expect_tag:
+        raise IntegrityError(
+            f"coded shard header says {tag!r}, manifest recorded {expect_tag!r}"
+        )
+    if expect_dtype is not None and header["dtype"] != expect_dtype:
+        raise IntegrityError(
+            f"coded shard header dtype {header['dtype']!r} != "
+            f"manifest dtype {expect_dtype!r}"
+        )
+    spec = parse_codec(tag)
+    count = int(header["count"])
+    nblocks = -(-count // spec.block)
+    off = 8 + hlen
+    parts: dict[str, np.ndarray] = {}
+    for name, nbytes in header["sections"]:
+        parts[name] = raw[off : off + nbytes]
+        off += nbytes
+    q = parts["q"].view(spec.qdtype).reshape(nblocks, spec.block)
+    scales = parts["scales"].view(np.float32)
+    dt = resolve_dtype(header["dtype"])
+    if spec.family == "int8ef":
+        residual = parts["residual"].view(np.float32)
+        d64 = (q.astype(np.float64) * scales.astype(np.float64)[:, None]
+               ).reshape(-1)[:count]
+        out = (d64 + residual.astype(np.float64)).astype(dt)
+    else:
+        out = _dequantize_np(q, scales, count).astype(dt)
+    out = out.reshape(header["shape"])
+    obs.add("codec.decode_shards")
+    obs.add("codec.decode_bytes", int(out.nbytes))
+    return out
+
+
+def decode_file(
+    path, tag: str, *, dtype: str | None = None
+) -> np.ndarray:
+    """Load + decode one coded shard file (the ``read_shard`` loader leg)."""
+    buf = np.load(path, mmap_mode="r")
+    return decode_payload(buf, expect_tag=tag, expect_dtype=dtype)

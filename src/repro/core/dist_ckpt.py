@@ -43,7 +43,7 @@ import numpy as np
 import repro.obs as obs
 from repro.chaos.points import fault_point
 
-from . import clock
+from . import clock, codec
 from .layout import MeshSpec, ShardLayout
 from .patterns import ParamSpec, StateKind
 from .tensor_io import content_digest, dtype_name, load_tensor, save_tensor
@@ -190,6 +190,21 @@ class DistManifest:
     shard set — including shards a delta inherits — so the next delta
     diffs against this manifest alone, never walking the chain.
 
+    Codec tables (``repro.core.codec``, DESIGN.md §10; both sparse, both
+    empty for all-raw checkpoints so the JSON round-trips unchanged):
+
+    * ``shard_codecs`` — digest key → self-describing codec tag
+      (``int8:b256``, ``int8ef:b256``, ``fp8:e4m3:b256``…) for every
+      non-raw shard; :meth:`DistCheckpoint.read_shard` decodes exactly
+      these, so every consumer above it serves coded shards unchanged;
+    * ``shard_pre_digests`` — digest key → *pre-encode* digest of the raw
+      update, recorded only where it differs from the served digest (i.e.
+      for lossy tags).  ``shard_digests`` stays the digest of *served*
+      (decoded) content — validation, peer-fetch verification and
+      publications keep their "digest == what a reader gets" meaning —
+      while the delta diff runs against :meth:`pre_encode_digests` so
+      codec choice never defeats the diff.
+
     Delta provenance (``save_mode="delta"``):
 
     * ``base_step`` — the committed step this delta was diffed against;
@@ -210,9 +225,23 @@ class DistManifest:
     format_version: str = FORMAT_VERSION
     created_at: float = 0.0
     shard_digests: dict[str, str] = dataclasses.field(default_factory=dict)
+    shard_codecs: dict[str, str] = dataclasses.field(default_factory=dict)
+    shard_pre_digests: dict[str, str] = dataclasses.field(default_factory=dict)
     base_step: int | None = None
     shard_sources: dict[str, int] = dataclasses.field(default_factory=dict)
     base_dirs: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def codec_tag(self, key: str) -> str:
+        """Codec tag of one shard (``"raw"`` when absent from the table)."""
+        return self.shard_codecs.get(key, "raw")
+
+    def pre_encode_digests(self) -> dict[str, str]:
+        """The effective *pre-encode* digest table the delta diff runs
+        against: served digests overlaid with the sparse lossy-shard
+        entries.  For an all-raw checkpoint this is ``shard_digests``."""
+        if not self.shard_pre_digests:
+            return self.shard_digests
+        return {**self.shard_digests, **self.shard_pre_digests}
 
     def to_json(self) -> dict:
         out = {
@@ -226,6 +255,11 @@ class DistManifest:
             "created_at": self.created_at,
             "shard_digests": self.shard_digests,
         }
+        # Sparse codec tables: all-raw manifests round-trip byte-unchanged.
+        if self.shard_codecs:
+            out["shard_codecs"] = self.shard_codecs
+        if self.shard_pre_digests:
+            out["shard_pre_digests"] = self.shard_pre_digests
         if self.base_step is not None:
             out["base_step"] = self.base_step
             out["shard_sources"] = self.shard_sources
@@ -245,6 +279,10 @@ class DistManifest:
             save_mode=str(d.get("save_mode", "dedup")),
             created_at=float(d.get("created_at", 0.0)),
             shard_digests={str(k): str(v) for k, v in d.get("shard_digests", {}).items()},
+            shard_codecs={str(k): str(v) for k, v in d.get("shard_codecs", {}).items()},
+            shard_pre_digests={
+                str(k): str(v) for k, v in d.get("shard_pre_digests", {}).items()
+            },
             base_step=int(d["base_step"]) if d.get("base_step") is not None else None,
             shard_sources={str(k): int(v) for k, v in d.get("shard_sources", {}).items()},
             base_dirs={str(k): str(v) for k, v in d.get("base_dirs", {}).items()},
@@ -382,10 +420,22 @@ class DistCheckpoint:
     ) -> np.ndarray:
         """Open one shard (mmap).  ``cache``: optional
         :class:`~repro.core.engine.HandleCache` so repeated opens of the
-        same file reuse one handle."""
+        same file reuse one handle.
+
+        This is THE decode point for coded shards (DESIGN.md §10): when the
+        manifest tags this shard with a non-raw codec, the payload is
+        decoded here — once per file when a cache is supplied — so every
+        consumer above (DIRECT restore, streaming reshard, UCP conversion,
+        hot promotion, peer fan-out, validation) serves coded checkpoints
+        through the unchanged fragment-read path."""
         path = self.shard_path(rank, name, kind)
         spec = self.manifest.params[name]
-        loader = lambda: load_tensor(path, dtype=spec.states[kind].dtype, mmap=mmap)
+        tag = self.manifest.codec_tag(shard_digest_key(rank, name, kind))
+        dtype = spec.states[kind].dtype
+        if tag == "raw":
+            loader = lambda: load_tensor(path, dtype=dtype, mmap=mmap)
+        else:
+            loader = lambda: codec.decode_file(path, tag, dtype=dtype)
         if cache is not None:
             return cache.get(path, loader)
         return loader()

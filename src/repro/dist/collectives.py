@@ -35,6 +35,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.block_quant import block_dequantize, block_quantize
+
 __all__ = ["quantize_int8", "dequantize_int8", "compressed_psum"]
 
 
@@ -44,23 +46,22 @@ def quantize_int8(x: jax.Array, *, block: int = 256) -> tuple[jax.Array, jax.Arr
     Returns ``(q, scales)`` where ``q`` is int8 of shape ``[nblocks, block]``
     (zero-padded past ``x.size``) and ``scales`` is fp32 of shape
     ``[nblocks]``.  All-zero blocks quantize to zeros with scale 0.
+
+    Delegates to the shared block-quant core
+    (:mod:`repro.kernels.block_quant`) — the same implementation the shard
+    codec encodes with, so the wire format and the checkpoint format cannot
+    drift.
     """
-    flat = x.reshape(-1).astype(jnp.float32)
-    n = flat.shape[0]
-    nblocks = -(-n // block)
-    flat = jnp.pad(flat, (0, nblocks * block - n))
-    blocks = flat.reshape(nblocks, block)
-    scales = jnp.max(jnp.abs(blocks), axis=1) / 127.0
-    safe = jnp.where(scales > 0, scales, 1.0)
-    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
-    return q, scales.astype(jnp.float32)
+    return block_quantize(x, block=block)
 
 
 def dequantize_int8(q: jax.Array, scales: jax.Array, shape) -> jax.Array:
-    """Inverse of :func:`quantize_int8` (drops the block padding)."""
-    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
-    size = math.prod(shape)
-    return flat[:size].reshape(shape)
+    """Inverse of :func:`quantize_int8` (drops the block padding).
+
+    The logical element count is derived from ``shape`` and passed to the
+    core explicitly — the zero-padding contract is the caller's, never
+    implicit in the payload."""
+    return block_dequantize(q, scales, count=math.prod(shape)).reshape(shape)
 
 
 def compressed_psum(

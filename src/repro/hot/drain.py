@@ -34,9 +34,10 @@ from repro.core.dist_ckpt import (
     resolve_delta_base,
     shard_digest_key,
 )
+from repro.core.codec import CodecPolicy, encode_shard
 from repro.core.engine import CheckpointEngine, default_engine
 from repro.core.patterns import StateKind
-from repro.core.tensor_io import fsync_path
+from repro.core.tensor_io import content_digest, fsync_path
 from repro.ckpt.saver import SaveResult
 
 from .snapshot import HotSnapshot
@@ -52,6 +53,7 @@ def persist_snapshot(
     fragments: list | None = None,
     base: "DistCheckpoint | Callable[[], DistCheckpoint | None] | None" = None,
     save_mode: str | None = None,
+    codec: CodecPolicy | None = None,
 ) -> SaveResult:
     """Write one hot snapshot to disk as a committed distributed checkpoint.
 
@@ -72,11 +74,17 @@ def persist_snapshot(
     exactly like ``write_distributed``: only fragments whose capture-time
     digest changed are written, the rest become manifest references.  An
     incompatible/missing base degrades to a full promotion (rebase).
+
+    ``codec`` (a :class:`~repro.core.codec.CodecPolicy`): encode fragments
+    at promotion time, exactly like ``write_distributed``.  Hot snapshots
+    themselves always stay raw in memory (capture is a slice, restore from
+    the hot tier never decodes); capture-time digests are the *pre-encode*
+    digests, so the delta diff against a coded base still holds.
     """
     with obs.timed("hot.drain", step=snapshot.step) as sw:
         return _persist_snapshot_traced(
             sw, snapshot, root, engine=engine, fragments=fragments,
-            base=base, save_mode=save_mode,
+            base=base, save_mode=save_mode, codec=codec,
         )
 
 
@@ -89,6 +97,7 @@ def _persist_snapshot_traced(
     fragments: list | None = None,
     base: "DistCheckpoint | Callable[[], DistCheckpoint | None] | None" = None,
     save_mode: str | None = None,
+    codec: CodecPolicy | None = None,
 ) -> SaveResult:
     if fragments is None:
         # Direct call: check completeness now.  (The drainer checks at
@@ -111,6 +120,8 @@ def _persist_snapshot_traced(
     engine = engine or default_engine()
     serial = engine.workers == 1
     m = snapshot.manifest
+    if codec is not None and codec.is_raw:
+        codec = None  # all-raw policy == no policy: legacy byte path
     fallback_reason = ""
     if save_mode == "delta":
         base, fallback_reason = resolve_delta_base(
@@ -118,10 +129,29 @@ def _persist_snapshot_traced(
         )
     else:
         base = None
+    # Capture-time digests are the *pre-encode* (raw content) digests; the
+    # delta diff runs against the base's pre-encode table, so codec choice
+    # — here or in the base — never defeats the diff.
     digests = {
         shard_digest_key(f.owner, name, StateKind(kv)): f.digest
         for name, kv, f in fragments
     }
+    base_pre = base.manifest.pre_encode_digests() if base is not None else {}
+    inherited_keys = [k for k, d in digests.items() if base_pre.get(k) == d]
+    # Initial tables: capture digests for written shards (exact for raw,
+    # placeholder until encode for coded — fixed up below), the base's
+    # served digest / pre digest / codec tag for inherited shards (the
+    # ancestor's bytes may be coded whatever this promotion's policy is).
+    served_tbl = dict(digests)
+    pre_tbl: dict[str, str] = {}
+    codec_tbl: dict[str, str] = {}
+    for k in inherited_keys:
+        served_tbl[k] = base.manifest.shard_digests[k]
+        if base_pre[k] != served_tbl[k]:
+            pre_tbl[k] = base_pre[k]
+        t = base.manifest.codec_tag(k)
+        if t != "raw":
+            codec_tbl[k] = t
     manifest = DistManifest(
         step=m.step,
         mesh=m.mesh,
@@ -133,37 +163,66 @@ def _persist_snapshot_traced(
         # since-released) snapshot dicts.  The table covers the FULL set,
         # inherited fragments included, so the next delta diffs against
         # this manifest alone.
-        shard_digests=digests,
+        shard_digests=served_tbl,
+        shard_codecs=codec_tbl,
+        shard_pre_digests=pre_tbl,
     )
     if base is not None:
         # Capture digests are the diff: a fragment whose digest matches the
         # base's recorded digest is promoted as a manifest reference with
         # flattened provenance, exactly like write_distributed.
-        flatten_provenance(
-            manifest, base,
-            [k for k, d in digests.items()
-             if base.manifest.shard_digests.get(k) == d],
-        )
+        flatten_provenance(manifest, base, inherited_keys)
     ckpt = DistCheckpoint.create(root, manifest)
     jobs = [
-        (name, StateKind(kv), frag.owner, frag.data)
+        (
+            name,
+            StateKind(kv),
+            frag.owner,
+            frag.data,
+            codec.tag_for(StateKind(kv)) if codec is not None else "raw",
+        )
         for name, kv, frag in fragments
         if shard_digest_key(frag.owner, name, StateKind(kv))
         not in manifest.shard_sources
     ]
 
-    def write_one(job) -> int:
-        name, kind, rank, data = job
-        with obs.span("drain.shard", rank=rank, param=name, kind=kind.value):
+    def write_one(job) -> tuple[int, str, str | None, str]:
+        name, kind, rank, data, tag = job
+        key = shard_digest_key(rank, name, kind)
+        with obs.span("drain.shard", rank=rank, param=name, kind=kind.value) as sp:
             fault_point("drain.shard", step=m.step, rank=rank, name=name,
                         kind=kind.value)
+            served = None  # == capture digest (raw bytes on disk)
+            if tag != "raw":
+                enc = encode_shard(data, tag)
+                tag = enc.tag  # int8ef may have fallen back to raw
+                if enc.tag != "raw":
+                    sp.set(codec=enc.tag)
+                    data = enc.payload
+                    served = content_digest(enc.decoded)
             written = ckpt.write_shard(rank, name, kind, data, fsync=serial)
             if not serial:
                 with obs.span("save.fsync"):
                     fsync_path(ckpt.own_shard_path(rank, name, kind))
-            return written
+            return written, key, served, tag
 
-    written = sum(engine.map(write_one, jobs))
+    results = engine.map(write_one, jobs)
+    written = sum(w for w, *_ in results)
+    # Coded shards only know their served digest after encoding: fix up the
+    # tables and rewrite the manifest once, still strictly before COMMIT.
+    # The all-raw path keeps the original single manifest write.
+    needs_rewrite = False
+    for _w, key, served, tag in results:
+        if tag != "raw":
+            needs_rewrite = True
+            manifest.shard_codecs[key] = tag
+        if served is not None and served != manifest.shard_digests[key]:
+            needs_rewrite = True
+            manifest.shard_pre_digests[key] = digests[key]
+            manifest.shard_digests[key] = served
+    if needs_rewrite:
+        with obs.span("save.manifest"):
+            ckpt.rewrite_manifest()
     engine.invalidate(ckpt.root)  # a re-drain into the same dir replaced files
     if base is not None:
         check_chain_committed(ckpt)
@@ -251,7 +310,8 @@ class HotDrainer:
                 self._q.task_done()
 
     def maybe_drain(self, snapshot: HotSnapshot, root, *, base=None,
-                    save_mode: str | None = None) -> bool:
+                    save_mode: str | None = None,
+                    codec: CodecPolicy | None = None) -> bool:
         """Enqueue promotion if this snapshot is an Nth one; True if queued.
 
         ``base``/``save_mode`` pass through to :func:`persist_snapshot` —
@@ -291,7 +351,7 @@ class HotDrainer:
                 ):
                     return persist_snapshot(
                         snapshot, root, engine=engine, fragments=fragments,
-                        base=base, save_mode=save_mode,
+                        base=base, save_mode=save_mode, codec=codec,
                     )
             finally:
                 with self._pending_lock:

@@ -1,0 +1,14 @@
+"""Block quantization: the shared core behind the shard codec and the
+compressed-gradient collectives (one format, one implementation)."""
+
+from .ops import block_dequantize, block_quantize
+from .ref import FMAX, blocked, dequantize_blocks, quantize_blocks
+
+__all__ = [
+    "FMAX",
+    "block_dequantize",
+    "block_quantize",
+    "blocked",
+    "dequantize_blocks",
+    "quantize_blocks",
+]

@@ -1,0 +1,105 @@
+"""Pallas TPU kernels for block quantization (the on-device codec path).
+
+One grid step quantizes ``_ROWS`` blocks (a ``[_ROWS, block]`` fp32 tile →
+an int8/fp8 tile plus a ``[_ROWS, 1]`` fp32 scale column).  ``_ROWS = 32``
+matches the int8 minimum tile height (32, 128), and the default
+``block = 256`` is a lane-multiple, so both the fp32 input tile and the
+int8 output tile are natively tileable.  The arithmetic is exactly the
+reference's (:mod:`repro.kernels.block_quant.ref`) — same ops in the same
+order — and the tests pin the two bit-identical under ``interpret=True``.
+
+On device this is where quantize-then-digest happens before shard bytes
+ever reach the host staging arena; in this CPU container the jitted
+reference path does the encoding and these kernels run under interpret
+mode in the test suite.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import FMAX
+
+__all__ = ["quantize_blocks_pallas", "dequantize_blocks_pallas"]
+
+_ROWS = 32  # blocks per grid step == int8 min sublane tile
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref, *, fmax: float, rounded: bool):
+    x = x_ref[...]                                           # [R, B] fp32
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / fmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    y = jnp.clip(x / safe, -fmax, fmax)
+    if rounded:
+        y = jnp.round(y)
+    q_ref[...] = y.astype(q_ref.dtype)
+    s_ref[...] = scale
+
+
+def _dequantize_kernel(q_ref, s_ref, x_ref):
+    x_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+def _pad_rows(blocks: jax.Array) -> tuple[jax.Array, int]:
+    nblocks = blocks.shape[0]
+    padded = -(-nblocks // _ROWS) * _ROWS
+    if padded != nblocks:
+        blocks = jnp.pad(blocks, ((0, padded - nblocks), (0, 0)))
+    return blocks, padded
+
+
+@functools.partial(jax.jit, static_argnames=("dtype", "interpret"))
+def quantize_blocks_pallas(
+    blocks: jax.Array, *, dtype=jnp.int8, interpret: bool = False
+) -> tuple[jax.Array, jax.Array]:
+    """Quantize pre-blocked fp32 ``[nblocks, block]`` → ``(q, scales)``.
+
+    Same contract as :func:`repro.kernels.block_quant.ref.quantize_blocks`.
+    Padding rows (zeros) quantize to scale-0 rows and are sliced off.
+    """
+    nblocks, block = blocks.shape
+    fmax = FMAX[jnp.dtype(dtype).name]
+    rounded = jnp.dtype(dtype).name == "int8"
+    x, padded = _pad_rows(blocks)
+    q, scales = pl.pallas_call(
+        functools.partial(_quantize_kernel, fmax=fmax, rounded=rounded),
+        grid=(padded // _ROWS,),
+        in_specs=[pl.BlockSpec((_ROWS, block), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((_ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((_ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded, block), dtype),
+            jax.ShapeDtypeStruct((padded, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return q[:nblocks], scales[:nblocks, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_blocks_pallas(
+    q: jax.Array, scales: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    """Dequantize ``(q, scales)`` → fp32 ``[nblocks, block]`` (padded; the
+    caller slices to the logical element count)."""
+    nblocks, block = q.shape
+    qp, padded = _pad_rows(q)
+    sp, _ = _pad_rows(scales.reshape(nblocks, 1))
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(padded // _ROWS,),
+        in_specs=[
+            pl.BlockSpec((_ROWS, block), lambda i: (i, 0)),
+            pl.BlockSpec((_ROWS, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((_ROWS, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, block), jnp.float32),
+        interpret=interpret,
+    )(qp, sp)
+    return out[:nblocks]

@@ -1,0 +1,59 @@
+"""Jitted entry points for block quantization.
+
+``use_kernel=False`` (default) runs the pure-``jnp`` reference — the right
+choice on CPU and under ``shard_map`` tracing; ``use_kernel=True`` runs the
+Pallas kernels (``interpret=True`` for CPU containers).  Both produce
+bit-identical results (property-tested in ``tests/test_codec.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import dequantize_blocks_pallas, quantize_blocks_pallas
+from .ref import blocked, dequantize_blocks, quantize_blocks
+
+__all__ = ["block_quantize", "block_dequantize"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "dtype", "use_kernel", "interpret")
+)
+def block_quantize(
+    x: jax.Array,
+    *,
+    block: int = 256,
+    dtype=jnp.int8,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantize any-shape ``x`` → ``(q [nblocks, block], scales [nblocks])``.
+
+    The logical element count ``x.size`` is NOT recoverable from the
+    output — callers must record it explicitly to dequantize.
+    """
+    blocks = blocked(x, block=block)
+    if use_kernel:
+        return quantize_blocks_pallas(blocks, dtype=dtype, interpret=interpret)
+    return quantize_blocks(blocks, dtype=dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("count", "use_kernel", "interpret")
+)
+def block_dequantize(
+    q: jax.Array,
+    scales: jax.Array,
+    *,
+    count: int,
+    use_kernel: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Dequantize → flat fp32 of the first ``count`` logical elements."""
+    if use_kernel:
+        flat = dequantize_blocks_pallas(q, scales, interpret=interpret)
+        return flat.reshape(-1)[:count]
+    return dequantize_blocks(q, scales, count=count)

@@ -1,0 +1,83 @@
+"""Reference (pure-``jnp``) block quantization — THE block-quant core.
+
+One implementation defines the format; everything else delegates to it or is
+property-tested bit-identical against it:
+
+* the gradient-compression collectives (``repro.dist.collectives``) call
+  :func:`quantize_blocks` / :func:`dequantize_blocks` directly, so the wire
+  format and the shard codec cannot drift;
+* the shard codec (``repro.core.codec``) encodes through the jitted wrapper
+  in :mod:`repro.kernels.block_quant.ops` and decodes with a trivial numpy
+  mirror that the tests pin to this reference;
+* the Pallas kernels in :mod:`repro.kernels.block_quant.kernel` are the
+  on-device path and are tested bit-identical under ``interpret=True``.
+
+Format (identical for int8 and per-block-scaled fp8):
+
+* the input is flattened C-order, cast to fp32, and zero-padded up to a
+  multiple of ``block`` — zero padding never changes a block's absmax, so
+  the scale of a partial last block equals the scale of its real elements;
+* ``scales[i] = max(|block_i|) / fmax`` (fp32, one per block; ``fmax`` is
+  127 for int8, the format's max finite value for fp8);
+* ``q[i, j] = round(block[i, j] / scale)`` clipped to ``±fmax`` and cast
+  (fp8 skips the rounding — the cast itself rounds);
+* all-zero blocks quantize to zeros with scale 0 (decode multiplies by the
+  *stored* scale, so the safe-divisor trick never leaks into the output).
+
+The zero-padding contract is **explicit**: decoding requires the logical
+element ``count`` — callers must record it (the codec stores it in the
+payload header; the collectives derive it from the gradient shape).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FMAX",
+    "blocked",
+    "quantize_blocks",
+    "dequantize_blocks",
+]
+
+# Max representable magnitude per quantized dtype (the scale denominator).
+FMAX = {
+    "int8": 127.0,
+    "float8_e4m3fn": 448.0,
+    "float8_e5m2": 57344.0,
+}
+
+
+def blocked(x: jax.Array, *, block: int) -> jax.Array:
+    """Flatten C-order, cast fp32, zero-pad, reshape to ``[nblocks, block]``."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    nblocks = -(-n // block)
+    flat = jnp.pad(flat, (0, nblocks * block - n))
+    return flat.reshape(nblocks, block)
+
+
+def quantize_blocks(
+    blocks: jax.Array, *, dtype=jnp.int8
+) -> tuple[jax.Array, jax.Array]:
+    """Quantize pre-blocked fp32 ``[nblocks, block]`` → ``(q, scales)``.
+
+    ``q`` has ``dtype`` and the input shape; ``scales`` is fp32
+    ``[nblocks]``.  This is the single definition of the block format.
+    """
+    fmax = FMAX[jnp.dtype(dtype).name]
+    scales = jnp.max(jnp.abs(blocks), axis=1) / fmax
+    safe = jnp.where(scales > 0, scales, 1.0)
+    y = jnp.clip(blocks / safe[:, None], -fmax, fmax)
+    if jnp.dtype(dtype).name == "int8":
+        y = jnp.round(y)
+    return y.astype(dtype), scales.astype(jnp.float32)
+
+
+def dequantize_blocks(q: jax.Array, scales: jax.Array, *, count: int) -> jax.Array:
+    """Inverse of :func:`quantize_blocks`: flat fp32 of the first ``count``
+    logical elements (the explicit element-count contract — no caller may
+    rely on implicit zero padding)."""
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    return flat[:count]

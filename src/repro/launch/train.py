@@ -53,6 +53,13 @@ def build_parser() -> argparse.ArgumentParser:
                    help="with --save-mode delta: every Nth disk save is a "
                    "full rebase, bounding the delta chain length")
     p.add_argument("--keep-last", type=int, default=10)
+    p.add_argument("--codec", default=None, metavar="TAG",
+                   help="code optimizer-moment shards with this block-quant "
+                   "tag (e.g. int8:b256, fp8:e4m3:b256); params stay raw "
+                   "(bit-exact).  See repro.core.codec")
+    p.add_argument("--codec-params", default=None, metavar="TAG",
+                   help="code parameter shards too; lossless tags only "
+                   "(raw, int8ef:bN) unless you know what you are doing")
     p.add_argument("--sync-save", action="store_true")
     p.add_argument("--zero", type=int, default=3, choices=(1, 2, 3))
     p.add_argument("--no-fsdp", action="store_true")
@@ -97,6 +104,8 @@ def main(argv=None) -> int:
 def _run(args) -> int:
     # jax-dependent imports only after XLA_FLAGS is final
     from repro.configs import ParallelismConfig, TrainConfig, get_config, reduced
+    from repro.ckpt.policy import CheckpointPolicy
+    from repro.core.codec import CodecPolicy
     from repro.launch.mesh import make_mesh_from_string
     from repro.train.trainer import Trainer
 
@@ -127,11 +136,16 @@ def _run(args) -> int:
         seed=args.seed,
     )
 
-    trainer = Trainer.create(
-        cfg, parallel, tcfg, jmesh,
-        batch_size=args.batch,
-        seq_len=args.seq,
-        ckpt_dir=args.ckpt_dir,
+    codec = None
+    if args.codec is not None or args.codec_params is not None:
+        moments = args.codec or "raw"
+        codec = CodecPolicy(
+            params=args.codec_params or "raw",
+            exp_avg=moments,
+            exp_avg_sq=moments,
+            allow_lossy_params=args.codec_params is not None,
+        )
+    policy = CheckpointPolicy(
         keep_last=args.keep_last,
         save_interval=args.save_interval,
         hot_interval=args.hot_interval,
@@ -139,6 +153,14 @@ def _run(args) -> int:
         async_save=not args.sync_save,
         save_mode=args.save_mode,
         full_interval=args.full_interval,
+        codec=codec,
+    )
+    trainer = Trainer.create(
+        cfg, parallel, tcfg, jmesh,
+        batch_size=args.batch,
+        seq_len=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        policy=policy,
     )
     state, info = trainer.init_or_restore()
     start = int(jax.device_get(state.step)) if (jax := __import__("jax")) else 0

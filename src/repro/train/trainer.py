@@ -26,6 +26,7 @@ from repro.configs.base import (
 )
 from repro.core.layout import MeshSpec
 from repro.ckpt.manager import CheckpointManager, RestoreInfo
+from repro.ckpt.policy import CheckpointPolicy, policy_from_legacy_kwargs
 from repro.dist.sharding import ShardingPlan, make_plan, make_sharder, vocab_multiple
 from repro.models import build_model
 from repro.models.lm import LM
@@ -62,16 +63,22 @@ class Trainer:
         batch_size: int,
         seq_len: int,
         ckpt_dir: str | None = None,
-        keep_last: int = 3,
-        save_interval: int = 50,
-        hot_interval: int | None = None,
-        hot_replication: int = 1,
-        async_save: bool = True,
-        save_mode: str = "dedup",
-        full_interval: int = 8,
-        registry=None,
+        policy: CheckpointPolicy | None = None,
         grad_transform=None,
+        **legacy,
     ) -> "Trainer":
+        """Checkpointing is configured by one
+        :class:`~repro.ckpt.policy.CheckpointPolicy` (``policy=``).  The
+        pre-policy keyword spelling (``keep_last=``, ``save_interval=``,
+        ``hot_interval=``, …) still works via a deprecation shim; mixing
+        both is a ``TypeError``."""
+        if legacy:
+            if policy is not None:
+                raise TypeError(
+                    "pass either policy=CheckpointPolicy(...) or individual "
+                    f"legacy knobs, not both (got {sorted(legacy)})"
+                )
+            policy = policy_from_legacy_kwargs(legacy, where="Trainer.create")
         mesh_spec = MeshSpec.from_mesh(jmesh)
         lm = build_model(
             cfg,
@@ -84,14 +91,7 @@ class Trainer:
             CheckpointManager(
                 ckpt_dir,
                 plan,
-                keep_last=keep_last,
-                save_interval=save_interval,
-                hot_interval=hot_interval,
-                hot_replication=hot_replication,
-                async_save=async_save,
-                save_mode=save_mode,
-                full_interval=full_interval,
-                registry=registry,
+                policy=policy,
                 config_fingerprint={
                     "model": cfg.fingerprint(),
                     "parallel": parallel.fingerprint(),

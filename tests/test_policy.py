@@ -1,0 +1,192 @@
+"""CheckpointPolicy: the consolidated checkpointing-knob object.
+
+Covers validation in ``__post_init__``, the codec-tag shorthand, the
+legacy-kwargs deprecation shim on both ``CheckpointManager`` and
+``Trainer.create``, and the error cases the shim must keep loud (unknown
+keyword names, mixing ``policy=`` with legacy knobs).
+"""
+
+import jax
+import pytest
+
+from repro.ckpt import CheckpointManager, CheckpointPolicy
+from repro.ckpt.policy import LEGACY_KNOBS, policy_from_legacy_kwargs
+from repro.configs import ParallelismConfig, get_config, reduced
+from repro.core.codec import CodecPolicy
+from repro.core.layout import MeshSpec
+from repro.dist.sharding import make_plan, vocab_multiple
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def plan():
+    cfg = reduced(get_config("smollm-360m"))
+    mesh = MeshSpec.from_dict({"data": 1, "model": 1})
+    parallel = ParallelismConfig()
+    lm = build_model(cfg, vocab_multiple=vocab_multiple(parallel, mesh))
+    return make_plan(cfg, lm.registry, parallel, mesh)
+
+
+# ---------------------------------------------------------------- validation
+def test_defaults_validate():
+    p = CheckpointPolicy()
+    assert p.save_mode == "dedup"
+    assert p.codec is None
+    assert p.effective_disk_interval == p.save_interval
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        {"save_mode": "sometimes"},
+        {"keep_last": 0},
+        {"save_interval": 0},
+        {"full_interval": 0},
+        {"hot_interval": 0},
+        {"disk_interval": 0},
+        {"max_pending_saves": 0},
+        {"hot_replication": -1},
+    ],
+)
+def test_bad_values_raise(kw):
+    with pytest.raises(ValueError):
+        CheckpointPolicy(**kw)
+
+
+def test_effective_disk_interval_override():
+    p = CheckpointPolicy(save_interval=5, disk_interval=20, hot_interval=5)
+    assert p.effective_disk_interval == 20
+
+
+# -------------------------------------------------------------- codec field
+def test_codec_tag_shorthand_codes_moments_only():
+    p = CheckpointPolicy(codec="int8:b128")
+    assert isinstance(p.codec, CodecPolicy)
+    assert p.codec.params == "raw"
+    assert p.codec.exp_avg == "int8:b128"
+    assert p.codec.exp_avg_sq == "int8:b128"
+
+
+def test_codec_policy_passthrough_and_all_raw_normalizes_to_none():
+    cp = CodecPolicy(exp_avg="fp8:e4m3:b256")
+    assert CheckpointPolicy(codec=cp).codec is cp
+    assert CheckpointPolicy(codec=CodecPolicy()).codec is None
+    assert CheckpointPolicy(codec="raw").codec is None
+
+
+def test_codec_wrong_type_raises():
+    with pytest.raises(TypeError):
+        CheckpointPolicy(codec=42)
+
+
+def test_lossy_params_require_opt_in():
+    with pytest.raises(ValueError):
+        CheckpointPolicy(codec=CodecPolicy(params="int8:b256"))
+    p = CheckpointPolicy(
+        codec=CodecPolicy(params="int8:b256", allow_lossy_params=True)
+    )
+    assert p.codec.params == "int8:b256"
+
+
+# ------------------------------------------------------------------- shim
+def test_legacy_knobs_cover_every_policy_field():
+    # the shim accepts exactly the policy's fields — adding a knob to the
+    # policy automatically extends the legacy surface, never silently drops
+    assert "save_mode" in LEGACY_KNOBS
+    assert "codec" in LEGACY_KNOBS
+
+
+def test_shim_warns_and_maps():
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        p = policy_from_legacy_kwargs(
+            {"keep_last": 7, "save_mode": "delta"}, where="here"
+        )
+    assert p.keep_last == 7 and p.save_mode == "delta"
+
+
+def test_shim_unknown_name_raises():
+    with pytest.raises(TypeError, match="kep_last"):
+        policy_from_legacy_kwargs({"kep_last": 7}, where="here")
+
+
+# ----------------------------------------------------- manager integration
+def test_manager_accepts_policy(tmp_path, plan):
+    pol = CheckpointPolicy(
+        keep_last=2, save_mode="delta", full_interval=4, codec="int8:b256",
+        async_save=False,
+    )
+    mgr = CheckpointManager(tmp_path / "ck", plan, policy=pol)
+    try:
+        assert mgr.policy is pol
+        assert mgr.keep_last == 2
+        assert mgr.save_mode == "delta"
+        assert mgr.full_interval == 4
+        assert isinstance(mgr.codec, CodecPolicy)
+        assert mgr._async is None
+    finally:
+        mgr.close()
+
+
+def test_manager_legacy_kwargs_warn_and_work(tmp_path, plan):
+    with pytest.warns(DeprecationWarning):
+        mgr = CheckpointManager(
+            tmp_path / "ck", plan, keep_last=5, async_save=False
+        )
+    try:
+        assert mgr.keep_last == 5 and mgr.codec is None
+    finally:
+        mgr.close()
+
+
+def test_manager_rejects_policy_plus_legacy(tmp_path, plan):
+    with pytest.raises(TypeError, match="not both"):
+        CheckpointManager(
+            tmp_path / "ck", plan, policy=CheckpointPolicy(), keep_last=2
+        )
+
+
+def test_manager_rejects_unknown_kwarg(tmp_path, plan):
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        CheckpointManager(tmp_path / "ck", plan, kep_last=2)
+
+
+def test_manager_default_policy(tmp_path, plan):
+    mgr = CheckpointManager(tmp_path / "ck", plan)
+    try:
+        assert mgr.policy == CheckpointPolicy()
+    finally:
+        mgr.close()
+
+
+# ----------------------------------------------------- trainer integration
+def test_trainer_accepts_policy_and_shims_legacy(tmp_path):
+    from repro.configs import TrainConfig
+    from repro.train.trainer import Trainer
+
+    cfg = reduced(get_config("smollm-360m"))
+    tcfg = TrainConfig(total_steps=10)
+    jmesh = jax.make_mesh((1, 1), ("data", "model"))
+    pol = CheckpointPolicy(save_interval=4, save_mode="delta", async_save=False)
+    tr = Trainer.create(
+        cfg, ParallelismConfig(), tcfg, jmesh,
+        batch_size=2, seq_len=16, ckpt_dir=str(tmp_path / "a"), policy=pol,
+    )
+    assert tr.manager.policy is pol
+    assert tr.manager.save_interval == 4
+    tr.manager.close()
+
+    with pytest.warns(DeprecationWarning):
+        tr2 = Trainer.create(
+            cfg, ParallelismConfig(), tcfg, jmesh,
+            batch_size=2, seq_len=16, ckpt_dir=str(tmp_path / "b"),
+            save_interval=6, async_save=False,
+        )
+    assert tr2.manager.save_interval == 6
+    tr2.manager.close()
+
+    with pytest.raises(TypeError, match="not both"):
+        Trainer.create(
+            cfg, ParallelismConfig(), tcfg, jmesh,
+            batch_size=2, seq_len=16, ckpt_dir=str(tmp_path / "c"),
+            policy=pol, save_interval=6,
+        )
