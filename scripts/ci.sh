@@ -26,7 +26,13 @@
 # regression in the recovery ladder fails the PR lane in seconds; the
 # nightly lane runs the full bounded sweep separately.
 #
-# Usage: scripts/ci.sh [--fast] [--chaos-smoke] [extra pytest args...]
+# Stage 0 — lint (opt-in, --lint): the project-invariant static analyzer
+# (repro.analysis — lock/clock/decode/catalog/except discipline plus the
+# PR 5/7 regression pins, DESIGN.md §11).  Pure stdlib, imports no model
+# code, runs in under a second — so it goes first and a broken invariant
+# fails before anything heavyweight starts.
+#
+# Usage: scripts/ci.sh [--fast] [--lint] [--chaos-smoke] [extra pytest args...]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -44,10 +50,12 @@ trap on_err ERR
 
 PYTEST_ARGS=()
 chaos_smoke=0
+lint=0
 while [[ $# -gt 0 ]]; do
     case "$1" in
         --fast) PYTEST_ARGS+=(-m "not slow"); shift ;;
         --chaos-smoke) chaos_smoke=1; shift ;;
+        --lint) lint=1; shift ;;
         *) break ;;
     esac
 done
@@ -59,6 +67,11 @@ if git ls-files | grep -E '(^|/)__pycache__/|\.py[cod]$' >/dev/null; then
     echo "ci.sh: tracked __pycache__/.pyc entries found:" >&2
     git ls-files | grep -E '(^|/)__pycache__/|\.py[cod]$' >&2
     exit 1
+fi
+
+if [[ "$lint" == 1 ]]; then
+    stage="lint"
+    python -m repro.analysis src/repro
 fi
 
 stage="import-smoke"

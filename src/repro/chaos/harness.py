@@ -201,8 +201,8 @@ class ChaosHarness:
         self.references: dict[int, dict] = {}  # step -> snapshot copy
         self.log: list[str] = []
         self._env_lock = threading.Lock()
-        self._pending_rank_loss: list[int] = []
-        self._storage_lost = False
+        self._pending_rank_loss: list[int] = []  #: guarded by self._env_lock
+        self._storage_lost = False  #: guarded by self._env_lock
         self._rng = random.Random(seed ^ 0xC0FFEE)
         self._snap = {
             n: {
@@ -322,14 +322,14 @@ class ChaosHarness:
             if mgr is not None:
                 try:
                     mgr.close()  # drains queues; errors died with the process
-                except BaseException:
+                except BaseException:  # repro: allow[except-discipline] -- simulated-dead process: whatever close() raises died with it
                     pass
             self.mgr = self._build_manager()
             try:
                 res = self.mgr.restore_latest(
                     self.jmesh, target_plan=self.tgt_plan, verify=True
                 )
-            except BaseException as e:  # noqa: BLE001 — classified below
+            except BaseException as e:  # repro: allow[except-discipline] -- injected faults surface as arbitrary types; _is_fault classifies the cause chain
                 if _is_fault(e):
                     self.log.append(f"crash during recovery (attempt {attempt})")
                     continue
@@ -371,7 +371,7 @@ class ChaosHarness:
             res = hot_recover(
                 self.mgr, event, self.jmesh, target_plan=self.tgt_plan
             )
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # repro: allow[except-discipline] -- injected faults surface as arbitrary types; _is_fault classifies the cause chain
             if _is_fault(e):
                 return self._recover_from_crash(e)
             return [Violation(
@@ -405,13 +405,15 @@ class ChaosHarness:
             )
         try:
             self.replica.sync()
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # repro: allow[except-discipline] -- injected faults surface as arbitrary types; _is_fault classifies the cause chain
             if _is_fault(e):
                 # the replica process died mid-stream; a fresh one rejoins
                 self.log.append("replica crashed mid-fetch; replaced")
                 self.replica = None
                 return []
-            if self._storage_lost:
+            with self._env_lock:
+                storage_lost = self._storage_lost
+            if storage_lost:
                 # the published step's disk fallback was the storage we lost;
                 # the fleet heals at the next successful publish
                 self.log.append(f"replica sync degraded after storage loss: {e}")
@@ -439,7 +441,7 @@ class ChaosHarness:
                 self.jmesh, step=step, target_plan=self.tgt_plan,
                 force_mode=force,
             )
-        except BaseException as e:  # noqa: BLE001
+        except BaseException as e:  # repro: allow[except-discipline] -- injected faults surface as arbitrary types; _is_fault classifies the cause chain
             if _is_fault(e):
                 return self._recover_from_crash(e)
             return [Violation(
@@ -496,7 +498,7 @@ class ChaosHarness:
                     try:
                         self.mgr.save(self._train_state(step), step)
                         self.mgr.wait()
-                    except BaseException as e:  # noqa: BLE001 — classified
+                    except BaseException as e:  # repro: allow[except-discipline] -- faults vs real bugs split by _is_fault/_expected_failure; real bugs re-raise
                         if _is_fault(e) or self._expected_failure(e, ctrl):
                             crash = e
                         else:
@@ -505,11 +507,14 @@ class ChaosHarness:
                         violations += self._recover_from_crash(crash)
                     violations += self._apply_rank_loss()
                     violations += self._sync_replica()
-                    if self._storage_lost and self.mgr.latest_step() is not None:
+                    with self._env_lock:
+                        storage_lost = self._storage_lost
+                    if storage_lost and self.mgr.latest_step() is not None:
                         # a fresh commit re-arms the disk fallback tier
                         pub = self.registry.current()
                         if pub is not None and pub.checkpoint.is_committed:
-                            self._storage_lost = False
+                            with self._env_lock:
+                                self._storage_lost = False
                     found = check_invariants(self.mgr, registry=self.registry)
                     obs.event(
                         "chaos.invariant_check", event=event,
@@ -521,7 +526,7 @@ class ChaosHarness:
                         break
                     completed = event
                 self.log.append(f"fired: {ctrl.describe()}")
-        except BaseException as e:  # noqa: BLE001 — the report carries it
+        except BaseException as e:  # repro: allow[except-discipline] -- sweep must always produce a report; the error field carries the failure
             error = f"{type(e).__name__}: {e}"
         finally:
             clock.reset()
@@ -529,8 +534,8 @@ class ChaosHarness:
             if mgr is not None:
                 try:
                     mgr.close()
-                except BaseException:
-                    pass  # background errors already classified above
+                except BaseException:  # repro: allow[except-discipline] -- teardown after the run is scored; background errors already classified
+                    pass
             self.replica_engine.close()
             if own_tracer:
                 obs.disable(tracer)

@@ -110,7 +110,7 @@ def _check_resume(manager) -> list[Violation]:
         ckpt = DistCheckpoint.open(manager.step_dir(step))
         target = TargetSpec(manager.plan.mesh, manager.plan.param_specs)
         rp = plan_resume(ckpt.manifest, target)
-    except Exception as e:  # noqa: BLE001 — any planning failure is the finding
+    except Exception as e:  # repro: allow[except-discipline] -- any planning failure IS the finding: report it as a resume violation
         return [Violation(
             "resume",
             f"plan_resume failed for newest committed step {step}: "

@@ -216,12 +216,12 @@ class ChaosController:
         self.schedule = schedule
         self.env = env
         self.pause_timeout = float(pause_timeout)
-        self.log: list[FiredEvent] = []
-        self.hits: dict[str, int] = {}
+        self.log: list[FiredEvent] = []  #: guarded by self._lock
+        self.hits: dict[str, int] = {}  #: guarded by self._lock
         self._lock = threading.Lock()
-        self._armed = 0  # index of the live fault
-        self._armed_at = 0  # hits[point] when it became armed
-        self._gates: dict[str, tuple[threading.Event, threading.Event]] = {}
+        self._armed = 0  #: guarded by self._lock -- index of the live fault
+        self._armed_at = 0  #: guarded by self._lock -- hits[point] when it became armed
+        self._gates: dict[str, tuple[threading.Event, threading.Event]] = {}  #: guarded by self._lock
 
     # ------------------------------------------------------------- lifecycle
     def __enter__(self) -> "ChaosController":

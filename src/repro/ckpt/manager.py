@@ -167,7 +167,7 @@ class CheckpointManager:
         # Closes the window where gc() could collect a base between a
         # queued delta's base resolution and its commit.
         self._pin_lock = threading.Lock()
-        self._pinned_chains: dict[Path, set[Path]] = {}
+        self._pinned_chains: dict[Path, set[Path]] = {}  #: guarded by self._pin_lock
         # Committed manifests are immutable: memoize referenced_steps per
         # step so gc() doesn't re-parse keep_last manifests on every save.
         self._refs_cache: dict[int, set[int]] = {}

@@ -384,7 +384,7 @@ class AsyncSaver:
         self._errors: list[BaseException] = []
         self._closed = False
         self._pending_lock = threading.Lock()
-        self._pending_roots: set[Path] = set()
+        self._pending_roots: set[Path] = set()  #: guarded by self._pending_lock
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
@@ -404,7 +404,7 @@ class AsyncSaver:
             fn = item
             try:
                 self._results.append(fn())
-            except BaseException as e:  # surfaced via check()
+            except BaseException as e:  # repro: allow[except-discipline] -- worker thread: every failure (incl. injected FaultError) is stashed and re-raised via check()
                 self._errors.append(e)
             finally:
                 self._q.task_done()

@@ -167,10 +167,10 @@ class BufferArena:
     def __init__(self, max_bytes: int = 1 << 30):
         self.max_bytes = int(max_bytes)
         self._lock = threading.Lock()
-        self._free: dict[int, list[np.ndarray]] = {}
-        self._pending: list[np.ndarray] = []  # recycled, chain maybe alive
-        self._pooled_ids: set[int] = set()  # ids parked in _free or _pending
-        self._retained = 0
+        self._free: dict[int, list[np.ndarray]] = {}  #: guarded by self._lock
+        self._pending: list[np.ndarray] = []  #: guarded by self._lock -- recycled, chain maybe alive
+        self._pooled_ids: set[int] = set()  #: guarded by self._lock -- ids parked in _free or _pending
+        self._retained = 0  #: guarded by self._lock
         self.allocs = 0
         self.reuses = 0
 
@@ -183,7 +183,7 @@ class BufferArena:
             size <<= 1
         return size
 
-    def _reap_locked(self) -> None:
+    def _reap_locked(self) -> None:  # repro: holds[self._lock]
         """Move pending buffers whose view chains died onto the free lists."""
         still: list[np.ndarray] = []
         for raw in self._pending:
@@ -295,8 +295,8 @@ class HandleCache:
         self._m_miss = metric + ".miss"
         self._m_evict = metric + ".eviction"
         self._lock = threading.Lock()
-        self._entries: OrderedDict[str, Any] = OrderedDict()
-        self._bytes = 0
+        self._entries: OrderedDict[str, Any] = OrderedDict()  #: guarded by self._lock
+        self._bytes = 0  #: guarded by self._lock
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -502,11 +502,11 @@ class CheckpointEngine:
         # a restore's peak memory for fallback atoms is capped.
         self.atoms = HandleCache(256, atom_cache_bytes, metric="engine.atom")
         self.arena = BufferArena(arena_max_bytes)
-        self._indexes: dict[tuple[str, str, str], FragmentIndex] = {}
+        self._indexes: dict[tuple[str, str, str], FragmentIndex] = {}  #: guarded by self._index_lock
         self._index_lock = threading.Lock()
-        self._atom_locks: dict[str, threading.Lock] = {}
+        self._atom_locks: dict[str, threading.Lock] = {}  #: guarded by self._atom_locks_lock
         self._atom_locks_lock = threading.Lock()
-        self._pool: ThreadPoolExecutor | None = None
+        self._pool: ThreadPoolExecutor | None = None  #: guarded by self._pool_lock
         self._pool_lock = threading.Lock()
 
     # ----------------------------------------------------------------- arena
@@ -577,7 +577,10 @@ class CheckpointEngine:
     def index_for(self, source, name: str, kind) -> FragmentIndex:
         """The (cached) fragment index of one ``(source, param, kind)``."""
         key = (source_cache_key(source), name, getattr(kind, "value", str(kind)))
-        idx = self._indexes.get(key)
+        # Optimistic unlocked peek: dict.get is GIL-atomic and an index is
+        # immutable once inserted, so a stale miss just falls through to
+        # the locked setdefault below.
+        idx = self._indexes.get(key)  # repro: allow[lock-discipline] -- GIL-atomic read of an insert-only dict; misses retry under the lock
         if idx is not None:
             obs.add("engine.index.hit")
             return idx

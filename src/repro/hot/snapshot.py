@@ -224,11 +224,11 @@ class HotTier:
         self.max_bytes = int(max_bytes)
         self.engine = engine or default_engine()
         self.save_mode = save_mode
-        self.failed_ranks: set[int] = set()
-        self._ring: deque[HotSnapshot] = deque()
+        self.failed_ranks: set[int] = set()  #: guarded by self._lock
+        self._ring: deque[HotSnapshot] = deque()  #: guarded by self._lock
         self._lock = threading.Lock()
-        self.captures = 0
-        self.evictions = 0
+        self.captures = 0  #: guarded by self._lock
+        self.evictions = 0  #: guarded by self._lock
 
     # ---------------------------------------------------------------- capture
     def capture(
@@ -291,7 +291,8 @@ class HotTier:
                 for rank in writing_ranks_for(spec, layout, self.save_mode):
                     jobs.append((name, kind, rank, arr, layout))
 
-        failed = frozenset(self.failed_ranks)  # consistent view per capture
+        with self._lock:
+            failed = frozenset(self.failed_ranks)  # consistent view per capture
 
         def stage(job):
             name, kind, rank, arr, layout = job
@@ -333,7 +334,7 @@ class HotTier:
             self._evict_locked()
         return hs, stats
 
-    def _evict_locked(self) -> None:
+    def _evict_locked(self) -> None:  # repro: holds[self._lock]
         def over_budget() -> bool:
             return (
                 len(self._ring) > self.max_snapshots
@@ -369,9 +370,12 @@ class HotTier:
         coverage (recovery planning will skip those).
         """
         ranks = set(int(r) for r in ranks)
-        self.failed_ranks |= ranks
         out: dict[int, list[str]] = {}
         with self._lock:
+            # Under the lock: a concurrent _capture snapshots this set (and
+            # iterating a set while another thread updates it can raise) —
+            # found by the lock checker, see DESIGN.md §11.
+            self.failed_ranks |= ranks
             for s in self._ring:
                 dead = s.fail_ranks(ranks, engine=self.engine)
                 if dead:

@@ -30,7 +30,8 @@ import argparse
 import dataclasses
 import json
 import sys
-import time
+
+import repro.obs as obs
 
 # TPU v5e constants (assignment-provided)
 PEAK_FLOPS = 197e12      # bf16 / chip
@@ -230,78 +231,81 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, args) -> dict:
         "mesh": "2x16x16" if multi_pod else "16x16",
         "ok": False,
     }
-    t_start = time.time()
-    built = build_cell(arch, shape_name, multi_pod, args)
-    if "skip" in built:
-        rec.update(skipped=True, skip_reason=built["skip"], ok=True)
+    # Durations go through obs.timed (perf_counter_ns), never time.time():
+    # the chaos harness may skew the wall clock, and these numbers feed
+    # regression comparisons (clock-injection policy, core/clock.py).
+    with obs.timed("dryrun.cell") as sw_cell:
+        built = build_cell(arch, shape_name, multi_pod, args)
+        if "skip" in built:
+            rec.update(skipped=True, skip_reason=built["skip"], ok=True)
+            return rec
+
+        jitted, lower_args = built["jitted"], built["lower_args"]
+        chips = built["chips"]
+
+        with obs.timed("dryrun.lower") as sw:
+            lowered = jitted.lower(*lower_args)
+        rec["lower_s"] = round(sw.elapsed_s, 1)
+        with obs.timed("dryrun.compile") as sw:
+            compiled = lowered.compile()
+        rec["compile_s"] = round(sw.elapsed_s, 1)
+
+        ma = compiled.memory_analysis()
+        print(f"[{arch} × {shape_name} × {rec['mesh']}] memory_analysis:", ma)
+        rec["memory"] = {
+            "argument_bytes_per_device": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(ma, "temp_size_in_bytes", None),
+            "alias_bytes_per_device": getattr(ma, "alias_size_in_bytes", None),
+        }
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # older jax returns [dict] per device
+            ca = ca[0] if ca else {}
+        print(f"[{arch} × {shape_name} × {rec['mesh']}] cost_analysis flops:",
+              ca.get("flops"), "bytes:", ca.get("bytes accessed"))
+        rec["xla_cost_analysis"] = {
+            "flops_static": ca.get("flops"),
+            "bytes_static": ca.get("bytes accessed"),
+        }
+
+        with obs.timed("dryrun.analyze") as sw:
+            txt = compiled.as_text()
+            costs = analyze_hlo(txt)
+        rec["analyze_s"] = round(sw.elapsed_s, 1)
+        rec["hlo_chars"] = len(txt)
+        rec["per_device"] = costs.to_json()
+
+        # ---- roofline terms (seconds; per the assignment formulas) ------------
+        compute_term = costs.dot_flops / PEAK_FLOPS
+        memory_term = costs.op_bytes / HBM_BW
+        collective_term = costs.total_collective_bytes / LINK_BW
+        terms = {
+            "compute_s": compute_term,
+            "memory_s": memory_term,
+            "collective_s": collective_term,
+        }
+        rec["roofline"] = terms
+        rec["dominant"] = max(terms, key=terms.get)
+
+        lm, shape = built["lm"], built["shape"]
+        total, active = active_params(lm)
+        if shape.kind == "train":
+            model_flops = 6.0 * active * shape.global_batch * shape.seq_len
+        elif shape.kind == "prefill":
+            model_flops = 2.0 * active * shape.global_batch * shape.seq_len
+        else:
+            model_flops = 2.0 * active * shape.global_batch
+        rec["params_total"] = total
+        rec["params_active"] = active
+        rec["model_flops"] = model_flops
+        hlo_global = costs.dot_flops * chips
+        rec["useful_flops_ratio"] = model_flops / hlo_global if hlo_global else 0.0
+        ideal = model_flops / (chips * PEAK_FLOPS)
+        bound = max(terms.values())
+        rec["roofline_fraction"] = ideal / bound if bound else 0.0
+        rec["wall_s"] = round(sw_cell.elapsed_s, 1)
+        rec["ok"] = True
         return rec
-
-    jitted, lower_args = built["jitted"], built["lower_args"]
-    chips = built["chips"]
-
-    t0 = time.time()
-    lowered = jitted.lower(*lower_args)
-    rec["lower_s"] = round(time.time() - t0, 1)
-    t0 = time.time()
-    compiled = lowered.compile()
-    rec["compile_s"] = round(time.time() - t0, 1)
-
-    ma = compiled.memory_analysis()
-    print(f"[{arch} × {shape_name} × {rec['mesh']}] memory_analysis:", ma)
-    rec["memory"] = {
-        "argument_bytes_per_device": getattr(ma, "argument_size_in_bytes", None),
-        "output_bytes_per_device": getattr(ma, "output_size_in_bytes", None),
-        "temp_bytes_per_device": getattr(ma, "temp_size_in_bytes", None),
-        "alias_bytes_per_device": getattr(ma, "alias_size_in_bytes", None),
-    }
-    ca = compiled.cost_analysis()
-    if isinstance(ca, (list, tuple)):  # older jax returns [dict] per device
-        ca = ca[0] if ca else {}
-    print(f"[{arch} × {shape_name} × {rec['mesh']}] cost_analysis flops:",
-          ca.get("flops"), "bytes:", ca.get("bytes accessed"))
-    rec["xla_cost_analysis"] = {
-        "flops_static": ca.get("flops"),
-        "bytes_static": ca.get("bytes accessed"),
-    }
-
-    t0 = time.time()
-    txt = compiled.as_text()
-    costs = analyze_hlo(txt)
-    rec["analyze_s"] = round(time.time() - t0, 1)
-    rec["hlo_chars"] = len(txt)
-    rec["per_device"] = costs.to_json()
-
-    # ---- roofline terms (seconds; per the assignment formulas) ------------
-    compute_term = costs.dot_flops / PEAK_FLOPS
-    memory_term = costs.op_bytes / HBM_BW
-    collective_term = costs.total_collective_bytes / LINK_BW
-    terms = {
-        "compute_s": compute_term,
-        "memory_s": memory_term,
-        "collective_s": collective_term,
-    }
-    rec["roofline"] = terms
-    rec["dominant"] = max(terms, key=terms.get)
-
-    lm, shape = built["lm"], built["shape"]
-    total, active = active_params(lm)
-    if shape.kind == "train":
-        model_flops = 6.0 * active * shape.global_batch * shape.seq_len
-    elif shape.kind == "prefill":
-        model_flops = 2.0 * active * shape.global_batch * shape.seq_len
-    else:
-        model_flops = 2.0 * active * shape.global_batch
-    rec["params_total"] = total
-    rec["params_active"] = active
-    rec["model_flops"] = model_flops
-    hlo_global = costs.dot_flops * chips
-    rec["useful_flops_ratio"] = model_flops / hlo_global if hlo_global else 0.0
-    ideal = model_flops / (chips * PEAK_FLOPS)
-    bound = max(terms.values())
-    rec["roofline_fraction"] = ideal / bound if bound else 0.0
-    rec["wall_s"] = round(time.time() - t_start, 1)
-    rec["ok"] = True
-    return rec
 
 
 def main(argv=None) -> int:
@@ -328,7 +332,7 @@ def main(argv=None) -> int:
 
     try:
         rec = run_cell(args.arch, args.shape, args.multi_pod, args)
-    except Exception as e:  # record failures — they are findings, not crashes
+    except Exception as e:  # repro: allow[except-discipline] -- a failed cell is a finding: record it as a JSONL row, don't crash the sweep
         rec = {
             "arch": args.arch,
             "shape": args.shape,

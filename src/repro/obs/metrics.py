@@ -23,8 +23,8 @@ __all__ = ["Metrics", "diff_counters"]
 class Metrics:
     def __init__(self) -> None:
         self._lock = threading.Lock()
-        self._counters: dict[str, float] = {}
-        self._gauges: dict[str, float] = {}
+        self._counters: dict[str, float] = {}  #: guarded by self._lock
+        self._gauges: dict[str, float] = {}  #: guarded by self._lock
 
     def add(self, name: str, value: float = 1) -> None:
         with self._lock:

@@ -216,8 +216,8 @@ class Tracer:
         self.epoch_ns = time.perf_counter_ns()
         self._ids = itertools.count(1)
         self._lock = threading.Lock()
-        self._spans: list[dict[str, Any]] = []
-        self._events: list[dict[str, Any]] = []
+        self._spans: list[dict[str, Any]] = []  #: guarded by self._lock
+        self._events: list[dict[str, Any]] = []  #: guarded by self._lock
         self._sinks = list(sinks or [])
 
     # -- producers ---------------------------------------------------------

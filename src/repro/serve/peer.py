@@ -108,7 +108,7 @@ class PeerFragmentSource:
         self._ckpt = publication.checkpoint
         # Shards this reader fetched and verified (it is a registered
         # holder of exactly these).
-        self._local: dict[str, np.ndarray] = {}
+        self._local: dict[str, np.ndarray] = {}  #: guarded by self._local_lock
         self._local_lock = threading.Lock()
 
     # --------------------------------------------------- FragmentSource API

@@ -107,15 +107,15 @@ class PublicationRegistry:
     def __init__(self, *, name: str | None = None):
         self.uid = name or f"reg{next(_uid_counter)}"
         self._lock = threading.Lock()
-        self._subs: list[Subscription] = []
-        self._current: Publication | None = None
-        self._seq = 0
+        self._subs: list[Subscription] = []  #: guarded by self._lock
+        self._current: Publication | None = None  #: guarded by self._lock
+        self._seq = 0  #: guarded by self._lock
         # Peer store: content key ("digest_key@digest") -> bytes + ordered
         # holder ids (registration order == fan-out tree position).
-        self._store: dict[str, np.ndarray] = {}
-        self._holders: dict[str, list[str]] = {}
-        self._poison: set[tuple[str, str]] = set()  # (holder, skey)
-        self._fetch_locks: dict[str, threading.Lock] = {}
+        self._store: dict[str, np.ndarray] = {}  #: guarded by self._lock
+        self._holders: dict[str, list[str]] = {}  #: guarded by self._lock
+        self._poison: set[tuple[str, str]] = set()  #: guarded by self._lock -- (holder, skey)
+        self._fetch_locks: dict[str, threading.Lock] = {}  #: guarded by self._lock
         self.store_evictions = 0
 
     # ------------------------------------------------------------- publish
